@@ -1,0 +1,80 @@
+"""Fig. 4 — index balance: cluster-size distribution of streaming VQ.
+
+Reports the cluster-size histogram, Gini coefficient, usage fraction and
+perplexity, and the Deep-Retrieval comparison (§1/§4: DR's top path held
+100K of 500K candidates -> concentration ~0.2; streaming VQ stays near
+uniform).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import trained_retriever
+
+
+def gini(x: np.ndarray) -> float:
+    x = np.sort(x.astype(np.float64))
+    n = len(x)
+    if x.sum() == 0:
+        return 0.0
+    cum = np.cumsum(x)
+    return float((n + 1 - 2 * (cum / cum[-1]).sum()) / n)
+
+
+def run() -> list:
+    tr = trained_retriever()
+    cl = np.asarray(tr.index.store.cluster)
+    cl = cl[cl >= 0]
+    counts = np.bincount(cl, minlength=tr.cfg.n_clusters)
+    p = counts / max(counts.sum(), 1)
+    nz = p[p > 0]
+    entropy = float(-(nz * np.log(nz)).sum())
+    rows = [
+        ("balance/items_indexed", None, int(counts.sum())),
+        ("balance/clusters_used_frac", None,
+         float((counts > 0).mean())),
+        ("balance/gini", None, round(gini(counts), 4)),
+        ("balance/perplexity", None, round(float(np.exp(entropy)), 1)),
+        ("balance/top_cluster_share", None,
+         round(float(counts.max() / max(counts.sum(), 1)), 4)),
+        ("balance/top16_share", None,
+         round(float(np.sort(counts)[-16:].sum()
+                     / max(counts.sum(), 1)), 4)),
+    ]
+    # histogram buckets (Fig. 4 upper)
+    edges = [0, 1, 10, 25, 50, 100, 250, 10 ** 9]
+    hist = np.histogram(counts, bins=edges)[0]
+    for lo, n in zip(edges[:-1], hist):
+        rows.append((f"balance/hist_ge_{lo}", None, int(n)))
+    # DR comparison: same stream trained quickly, path concentration
+    rows += _dr_concentration(tr)
+    return rows
+
+
+def _dr_concentration(tr) -> list:
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.common import item_embeddings, user_embeddings
+    from repro.baselines import DRConfig, DRIndex, init_dr, train_dr_step
+
+    cfg = DRConfig(depth=3, k_nodes=32, dim=tr.cfg.embed_dim, beam=16)
+    params = init_dr(jax.random.PRNGKey(0), cfg)
+    dri = DRIndex(cfg, tr.cfg.n_items)
+    rng = np.random.default_rng(0)
+    users = rng.integers(0, tr.cfg.n_users, 2048)
+    u = user_embeddings(tr, users)
+    # E-steps on (user, positive-item-path) pairs + one M-step
+    item_of = rng.integers(0, tr.cfg.n_items, 2048)
+    for i in range(0, 2048, 256):
+        paths = jnp.asarray(dri.item_paths[item_of[i:i + 256], 0])
+        params, _ = train_dr_step(params, cfg, jnp.asarray(u[i:i + 256]),
+                                  paths)
+    item_emb, _ = item_embeddings(tr)
+    dri.m_step(params, item_emb)
+    sizes = np.asarray([len(v) for v in dri.inverted.values()])
+    return [
+        ("balance/dr_paths_used", None, int(len(sizes))),
+        ("balance/dr_gini", None, round(gini(sizes), 4)),
+        ("balance/dr_top_path_share", None,
+         round(float(sizes.max() / max(sizes.sum(), 1)), 4)),
+    ]

@@ -1,0 +1,82 @@
+"""§3.2 — index reparability under distribution drift.
+
+Trains two identical retrievers (L_aux vs vanilla VQ-VAE L_sim), then
+rotates the topic structure of the stream and continues streaming
+training.  Reports post-drift recall and the fraction of items that
+re-assigned to a new cluster: L_sim 'locks' items (the paper's observed
+degradation); the L_aux variant keeps repairing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_cfg, make_stream
+from repro.baselines import recall_at_k
+from repro.core import assignment_store as astore
+from repro.core import retriever as R
+from repro.launch.train import eval_svq_recall, train_svq
+
+K = 100
+STEPS = 150
+DRIFT_STEPS = 150
+
+
+def _continue_training(cfg, stream, params, index, n_steps, batch=256):
+    from repro.optim import adagrad, adamw, clip_by_global_norm, \
+        multi_optimizer
+    route = lambda p: ("adagrad" if "tables" in jax.tree_util.keystr(p)
+                       else "adamw")
+    opt = multi_optimizer(route, {"adagrad": adagrad(0.05),
+                                  "adamw": adamw(1e-3)})
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step_fn(params, index, opt_state, step, imp, cand):
+        grads, new_index, _ = R.train_step(params, index, cfg, imp, cand)
+        grads, _ = clip_by_global_norm(grads, 10.0)
+        params, opt_state = opt.update(grads, opt_state, params, step)
+        return params, new_index, opt_state
+
+    for t in range(n_steps):
+        imp = {k: jnp.asarray(v)
+               for k, v in stream.impression_batch(batch).items()}
+        cand = {k: jnp.asarray(v)
+                for k, v in stream.candidate_batch(batch).items()}
+        params, index, opt_state = step_fn(params, index, opt_state,
+                                           jnp.asarray(t), imp, cand)
+    return params, index
+
+
+CURVE = (25, 25, 50, 50)      # post-drift training segments
+
+
+def run() -> list:
+    rows = []
+    for variant, use_l_sim in (("l_aux", False), ("l_sim", True)):
+        cfg = bench_cfg(use_l_sim=use_l_sim)
+        stream = make_stream(cfg)
+        params, index, _ = train_svq(cfg, stream, STEPS, 256, seed=11)
+        pre = eval_svq_recall(cfg, params, index, stream, n_users=48,
+                              k=K)["recall"]
+        before_assign = np.asarray(index.store.cluster).copy()
+        # drift: invert/permute topic centers (hard semantic shift)
+        stream.topic_centers = -stream.topic_centers[::-1]
+        rows.append((f"drift/{variant}_recall_pre", None, round(pre, 4)))
+        # repair-speed curve: recall after each post-drift segment
+        done = 0
+        for seg in CURVE:
+            params, index = _continue_training(cfg, stream, params,
+                                               index, seg)
+            done += seg
+            r = eval_svq_recall(cfg, params, index, stream, n_users=48,
+                                k=K)["recall"]
+            rows.append((f"drift/{variant}_recall_post{done:03d}", None,
+                         round(r, 4)))
+        after_assign = np.asarray(index.store.cluster)
+        occ = before_assign >= 0
+        moved = float((before_assign[occ] != after_assign[occ]).mean())
+        rows.append((f"drift/{variant}_reassigned_frac", None,
+                     round(moved, 4)))
+    return rows

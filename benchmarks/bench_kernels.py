@@ -1,0 +1,56 @@
+"""Kernel-layer microbench: jnp reference timings + interpret validation.
+
+Wall-time of the Pallas kernels is NOT meaningful on CPU (interpret mode
+runs the kernel body in Python); this bench times the jnp reference path
+(what the dry-run lowers) and re-validates kernels against it at bench
+shapes.  Real-TPU kernel timing hooks the same functions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.kernels import ops, ref
+
+
+def run() -> list:
+    rng = np.random.default_rng(4)
+    rows = []
+
+    b, k, d = 4096, 16384, 64            # paper-scale assignment batch
+    v = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    e = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    r = jnp.ones((k,), jnp.float32)
+    us, a_ref = timed(jax.jit(ref.vq_assign_ref), v, e, r, n=3)
+    rows.append(("kernels/vq_assign_ref_us", round(us, 1),
+                 f"B={b} K={k} d={d}"))
+    a_pal = ops.vq_assign(v[:128], e, r)     # interpret validation slice
+    ok = bool(jnp.all(a_pal == ref.vq_assign_ref(v[:128], e, r)))
+    rows.append(("kernels/vq_assign_pallas_match", None, ok))
+
+    n = 1_000_000
+    items = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    bias = jnp.zeros((n,), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    us, _ = timed(jax.jit(lambda *a: ref.topk_dot_ref(*a, 512)),
+                  u, items, bias, n=3)
+    rows.append(("kernels/topk_dot_1M_ref_us", round(us, 1),
+                 "retrieval_cand hot path"))
+
+    bsz = 8192
+    uu = jnp.asarray(rng.normal(size=(bsz, d)).astype(np.float32))
+    vv = jnp.asarray(rng.normal(size=(bsz, d)).astype(np.float32))
+    bb = jnp.zeros((bsz,), jnp.float32)
+    us, _ = timed(jax.jit(ref.inbatch_softmax_ref), uu, vv, bb, n=3)
+    rows.append(("kernels/inbatch_softmax_ref_us", round(us, 1),
+                 f"B={bsz} (L_aux hot path)"))
+
+    table = jnp.asarray(rng.normal(size=(100_000, 64)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 100_000, (4096, 20))
+                      .astype(np.int32))
+    us, _ = timed(jax.jit(ref.embedding_bag_ref), table, ids, n=3)
+    rows.append(("kernels/embedding_bag_ref_us", round(us, 1),
+                 "B=4096 bag=20 (DLRM hot path)"))
+    return rows

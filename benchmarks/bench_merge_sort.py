@@ -1,0 +1,49 @@
+"""§3.4 / Alg. 1 — merge-sort serving: cost and quality vs full sort.
+
+Chunk-size sweep (1/4/8/16): larger chunks cut pops (cost) at a small
+quality loss ('we can stand some mistakes'), exactly Fig. 2's trade-off.
+Also times the heap oracle vs the TPU-form lax.scan implementation.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core import merge_sort
+
+C, L, TARGET = 64, 256, 512
+
+
+def run() -> list:
+    rng = np.random.default_rng(3)
+    cs = rng.normal(size=(C,)).astype(np.float32)
+    bl = -np.sort(-rng.normal(size=(C, L)).astype(np.float32), axis=1)
+    ln = rng.integers(L // 2, L + 1, size=(C,)).astype(np.int32)
+    jcs, jbl, jln = map(jnp.asarray, (cs, bl, ln))
+    pos_exact, _ = merge_sort.full_sort_topk(jcs, jbl, jln, TARGET)
+    want = set(np.asarray(pos_exact)[np.asarray(pos_exact) >= 0].tolist())
+    rows = []
+    for chunk in (1, 4, 8, 16):
+        fn = jax.jit(lambda a, b, c, ch=chunk: merge_sort.merge_sort_serve(
+            a, b, c, ch, TARGET))
+        us, (pos, _) = timed(fn, jcs, jbl, jln, n=5)
+        got = set(np.asarray(pos)[np.asarray(pos) >= 0].tolist())
+        overlap = len(got & want) / max(len(want), 1)
+        rows.append((f"merge_sort/chunk{chunk}_us", round(us, 1),
+                     f"overlap_vs_exact={overlap:.4f}"))
+    # heap oracle (python) timing for context
+    t0 = time.perf_counter()
+    merge_sort.merge_sort_serve_np(cs, bl, ln, 8, TARGET)
+    rows.append(("merge_sort/python_heap_us",
+                 round((time.perf_counter() - t0) * 1e6, 1),
+                 "faithful Alg. 1 reference"))
+    us_full, _ = timed(jax.jit(
+        lambda a, b, c: merge_sort.full_sort_topk(a, b, c, TARGET)),
+        jcs, jbl, jln, n=5)
+    rows.append(("merge_sort/full_sort_us", round(us_full, 1),
+                 "exact top-k over all pairs"))
+    return rows

@@ -1,0 +1,101 @@
+"""Shared fixtures for the paper-table benchmarks.
+
+Trains ONE small streaming-VQ retriever on the synthetic stream and
+caches it (module-level) so every benchmark reuses the same model; sizes
+are CPU-budgeted (full-size configs are exercised by the dry-run).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core import assignment_store as astore
+from repro.data import RecsysStream, StreamConfig
+from repro.launch.train import train_svq
+
+N_ITEMS = 8_000
+N_USERS = 2_000
+EMBED_DIM = 32
+N_CLUSTERS = 256
+
+
+def bench_cfg(**kw):
+    cfg = get_smoke("svq").with_(
+        n_clusters=N_CLUSTERS, n_items=N_ITEMS, n_users=N_USERS,
+        embed_dim=EMBED_DIM, user_hist_len=8, clusters_per_query=32,
+        candidates_out=512, chunk_size=8)
+    return cfg.with_(**kw) if kw else cfg
+
+
+def make_stream(cfg, **kw):
+    kw.setdefault("label_noise", 0.5)
+    return RecsysStream(StreamConfig(
+        n_items=cfg.n_items, n_users=cfg.n_users,
+        hist_len=cfg.user_hist_len, **kw))
+
+
+@dataclass
+class TrainedRetriever:
+    cfg: object
+    params: object
+    index: object
+    stream: RecsysStream
+    train_s: float
+
+
+_CACHE: Dict[str, TrainedRetriever] = {}
+
+
+def trained_retriever(key: str = "default", steps: int = 250,
+                      batch: int = 256, **cfg_kw) -> TrainedRetriever:
+    if key in _CACHE:
+        return _CACHE[key]
+    cfg = bench_cfg(**cfg_kw)
+    stream = make_stream(cfg)
+    t0 = time.perf_counter()
+    params, index, _ = train_svq(cfg, stream, steps, batch)
+    tr = TrainedRetriever(cfg=cfg, params=params, index=index,
+                          stream=stream, train_s=time.perf_counter() - t0)
+    _CACHE[key] = tr
+    return tr
+
+
+def item_embeddings(tr: TrainedRetriever) -> np.ndarray:
+    """Current item personality embeddings for ALL items (via item tower)."""
+    from repro.core import retriever as R
+    ids = jnp.arange(tr.cfg.n_items, dtype=jnp.int32)
+    cates = jnp.asarray(tr.stream.item_cate, jnp.int32)
+    feat = R.item_features(tr.params, ids, cates)
+    from repro.models.dense import mlp
+    v_all = mlp(tr.params["item_tower"], feat)
+    return np.asarray(v_all[:, :-1]), np.asarray(v_all[:, -1])
+
+
+def user_embeddings(tr: TrainedRetriever, user_ids: np.ndarray,
+                    task: int = 0) -> np.ndarray:
+    from repro.core import retriever as R
+    from repro.models.dense import mlp
+    hist = jnp.asarray(tr.stream.user_hist[user_ids], jnp.int32)
+    feat, _ = R.user_features(tr.params, jnp.asarray(user_ids, jnp.int32),
+                              hist)
+    u = jax.vmap(lambda tw: mlp(tw, feat))(tr.params["user_towers"])[task]
+    return np.asarray(u)
+
+
+def timed(fn, *args, n: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") \
+        else None
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6, out   # us/call

@@ -1,0 +1,80 @@
+"""Multi-task streaming VQ under distribution drift (§3.2 + §3.6).
+
+    PYTHONPATH=src python examples/multitask_drift.py
+
+Trains the 2-task retriever (shared codebook, per-task user towers,
+reward-weighted EMA, Eq. 12-13) on a drifting stream and shows the index
+repairing itself: cluster reassignment continues after drift and recall
+recovers.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.data import RecsysStream, StreamConfig
+from repro.launch.train import eval_svq_recall, train_svq
+
+
+def main() -> None:
+    cfg = get_smoke("svq").with_(
+        n_clusters=256, n_items=10_000, n_users=2_000, embed_dim=32,
+        n_tasks=2, eta=(1.0, 0.5), clusters_per_query=32,
+        candidates_out=256)
+    stream = RecsysStream(StreamConfig(
+        n_items=cfg.n_items, n_users=cfg.n_users,
+        hist_len=cfg.user_hist_len, n_tasks=2, drift_rate=0.002))
+
+    print("== phase 1: train 2-task retriever on drifting stream ==")
+    params, index, res = train_svq(cfg, stream, n_steps=200, batch=256,
+                                   log_every=50)
+    r1 = eval_svq_recall(cfg, params, index, stream, n_users=48, k=50)
+    print(f"recall@50 after phase 1: {r1['recall']:.3f}")
+    assign1 = np.asarray(index.store.cluster).copy()
+
+    print("== phase 2: hard drift, continue streaming ==")
+    stream.topic_centers = -stream.topic_centers[::-1]
+    params, index, res = _continue(cfg, stream, params, index, 200)
+    r2 = eval_svq_recall(cfg, params, index, stream, n_users=48, k=50)
+    assign2 = np.asarray(index.store.cluster)
+    occ = assign1 >= 0
+    moved = float((assign1[occ] != assign2[occ]).mean())
+    print(f"recall@50 after repair: {r2['recall']:.3f} "
+          f"(items reassigned: {moved:.1%})")
+    print("index repaired itself with NO offline rebuild (index "
+          "immediacy + reparability)")
+
+
+def _continue(cfg, stream, params, index, steps):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import retriever as R
+    from repro.optim import adagrad, adamw, clip_by_global_norm, \
+        multi_optimizer
+    route = lambda p: ("adagrad" if "tables" in jax.tree_util.keystr(p)
+                       else "adamw")
+    opt = multi_optimizer(route, {"adagrad": adagrad(0.05),
+                                  "adamw": adamw(1e-3)})
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step_fn(params, index, opt_state, step, imp, cand):
+        grads, new_index, m = R.train_step(params, index, cfg, imp, cand)
+        grads, _ = clip_by_global_norm(grads, 10.0)
+        params, opt_state = opt.update(grads, opt_state, params, step)
+        return params, new_index, opt_state
+
+    for t in range(steps):
+        imp = {k: jnp.asarray(v)
+               for k, v in stream.impression_batch(256).items()}
+        cand = {k: jnp.asarray(v)
+                for k, v in stream.candidate_batch(256).items()}
+        params, index, opt_state = step_fn(params, index, opt_state,
+                                           jnp.asarray(t), imp, cand)
+    return params, index, None
+
+
+if __name__ == "__main__":
+    main()

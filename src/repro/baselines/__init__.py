@@ -1,0 +1,4 @@
+from repro.baselines.brute_force import mips_topk, recall_at_k
+from repro.baselines.deep_retrieval import (DRConfig, DRIndex, beam_search,
+                                            init_dr, train_dr_step)
+from repro.baselines.hnsw import HNSW, build_hnsw

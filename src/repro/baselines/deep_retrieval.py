@@ -1,0 +1,177 @@
+"""Deep Retrieval [arXiv:2007.07203 / Gao et al. CIKM'21] baseline.
+
+D isometric layers of K nodes; an item is a set of J paths (J=3 in the
+paper's production config, Appendix B).  The user model scores a path as
+the product of per-layer softmax probabilities conditioned on the prefix;
+serving beam-searches the lattice and retrieves all items of the selected
+paths.
+
+Crucially for the comparison: item->path assignment happens in a periodic
+**M-step** (the 1-hour offline stage of Table 1), not in real time —
+benchmarks/bench_index_build.py measures this, and bench_balance.py
+reproduces DR's popularity-concentration pathology ("top path produced
+100K of 500K candidates") versus streaming VQ's balanced clusters.
+
+JAX model + numpy EM bookkeeping; sized for offline benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class DRConfig:
+    def __init__(self, depth: int = 3, k_nodes: int = 64, dim: int = 32,
+                 n_paths_per_item: int = 3, beam: int = 32):
+        self.depth = depth
+        self.k_nodes = k_nodes
+        self.dim = dim
+        self.n_paths = n_paths_per_item
+        self.beam = beam
+
+
+def init_dr(key: jax.Array, cfg: DRConfig) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, cfg.depth)
+    # layer d: score = (u + sum of chosen node embs) @ W_d -> K logits
+    return {
+        "node_emb": jax.random.normal(ks[0], (cfg.depth, cfg.k_nodes,
+                                               cfg.dim)) * 0.1,
+        "w": jax.random.normal(ks[1], (cfg.depth, cfg.dim,
+                                        cfg.k_nodes)) * 0.1,
+    }
+
+
+def path_logprob(params, cfg: DRConfig, u: jax.Array,
+                 paths: jax.Array) -> jax.Array:
+    """u: (B, dim); paths: (P, D) node ids -> (B, P) log prob."""
+    def layer(carry, d):
+        state, logp = carry          # state: (B, P, dim), logp: (B, P)
+        logits = jnp.einsum("bpd,dk->bpk", state, params["w"][d])
+        lsm = jax.nn.log_softmax(logits, axis=-1)
+        sel = paths[:, d]                                   # (P,)
+        logp = logp + lsm[:, jnp.arange(paths.shape[0]), sel]
+        state = state + params["node_emb"][d, sel][None]
+        return (state, logp), None
+
+    b, p = u.shape[0], paths.shape[0]
+    state0 = jnp.broadcast_to(u[:, None, :], (b, p, u.shape[1]))
+    (_, logp), _ = jax.lax.scan(layer, (state0, jnp.zeros((b, p))),
+                                jnp.arange(cfg.depth))
+    return logp
+
+
+def beam_search(params, cfg: DRConfig, u: np.ndarray,
+                beam: int | None = None) -> np.ndarray:
+    """-> (B, beam, D) best paths per user."""
+    beam = beam or cfg.beam
+    u = jnp.asarray(u)
+    b = u.shape[0]
+    node_emb = params["node_emb"]
+    # level 0
+    logits0 = jax.nn.log_softmax(u @ params["w"][0], axis=-1)   # (B, K)
+    lp, idx = jax.lax.top_k(logits0, min(beam, cfg.k_nodes))
+    paths = idx[:, :, None]                                     # (B, W, 1)
+    state = u[:, None, :] + node_emb[0][idx]
+    for d in range(1, cfg.depth):
+        logits = jax.nn.log_softmax(
+            jnp.einsum("bwd,dk->bwk", state, params["w"][d]), axis=-1)
+        cand = lp[:, :, None] + logits                          # (B, W, K)
+        flat = cand.reshape(b, -1)
+        lp, flat_idx = jax.lax.top_k(flat, beam)
+        w_idx = flat_idx // cfg.k_nodes
+        k_idx = flat_idx % cfg.k_nodes
+        paths = jnp.concatenate(
+            [jnp.take_along_axis(paths, w_idx[:, :, None], axis=1),
+             k_idx[:, :, None]], axis=-1)
+        state = jnp.take_along_axis(state, w_idx[:, :, None], axis=1) \
+            + node_emb[d][k_idx]
+    return np.asarray(paths)
+
+
+class DRIndex:
+    """item -> J paths table + inverted path -> items lists."""
+
+    def __init__(self, cfg: DRConfig, n_items: int, seed: int = 0):
+        self.cfg = cfg
+        rng = np.random.default_rng(seed)
+        self.item_paths = rng.integers(
+            0, cfg.k_nodes, (n_items, cfg.n_paths, cfg.depth))
+        self._rebuild_inverted()
+
+    def _key(self, path: np.ndarray) -> int:
+        key = 0
+        for d in range(self.cfg.depth):
+            key = key * self.cfg.k_nodes + int(path[d])
+        return key
+
+    def _rebuild_inverted(self) -> None:
+        self.inverted: Dict[int, List[int]] = {}
+        for item in range(self.item_paths.shape[0]):
+            for j in range(self.cfg.n_paths):
+                self.inverted.setdefault(
+                    self._key(self.item_paths[item, j]), []).append(item)
+
+    def m_step(self, params, user_emb_of_item: np.ndarray,
+               batch_items: np.ndarray | None = None) -> None:
+        """Reassign items to their top-J beam paths (the offline M-step).
+
+        ``user_emb_of_item``: (n_items, dim) aggregated positive-user
+        embedding per item (DR's M-step scores paths with the item's
+        interacting users; the aggregate is the streaming-free analog).
+        """
+        items = (np.arange(self.item_paths.shape[0])
+                 if batch_items is None else batch_items)
+        paths = beam_search(params, self.cfg, user_emb_of_item[items],
+                            beam=self.cfg.n_paths)          # (N, J, D)
+        self.item_paths[items] = paths
+        self._rebuild_inverted()
+
+    def retrieve(self, params, u: np.ndarray, n_paths: int,
+                 max_items: int) -> Tuple[np.ndarray, np.ndarray]:
+        """-> (item ids (<=max_items,), per-path candidate counts)."""
+        paths = beam_search(params, self.cfg, u[None], beam=n_paths)[0]
+        out: List[int] = []
+        counts = []
+        seen = set()
+        for p in paths:
+            lst = self.inverted.get(self._key(p), [])
+            counts.append(len(lst))
+            for it in lst:
+                if it not in seen:
+                    seen.add(it)
+                    out.append(it)
+            if len(out) >= max_items:
+                break
+        return np.asarray(out[:max_items], np.int64), np.asarray(counts)
+
+
+def train_dr_step(params, cfg: DRConfig, u: jax.Array,
+                  item_paths: jax.Array, lr: float = 0.05):
+    """One E-step SGD update: maximize log prob of positive items' paths.
+
+    u: (B, dim) user embeddings; item_paths: (B, D) one sampled path of
+    the positive item.  Returns (new_params, loss).
+    """
+    def loss_fn(p):
+        # score each row's own path: build (B, D) selection
+        def layer(carry, d):
+            state, logp = carry
+            logits = jnp.einsum("bd,dk->bk", state, p["w"][d])
+            lsm = jax.nn.log_softmax(logits, axis=-1)
+            sel = item_paths[:, d]
+            logp = logp + jnp.take_along_axis(lsm, sel[:, None],
+                                              axis=1)[:, 0]
+            state = state + p["node_emb"][d, sel]
+            return (state, logp), None
+
+        (_, logp), _ = jax.lax.scan(
+            layer, (u, jnp.zeros(u.shape[0])), jnp.arange(cfg.depth))
+        return -jnp.mean(logp)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g,
+                                        params, grads)
+    return new_params, loss

@@ -1,0 +1,130 @@
+"""HNSW [Malkov & Yashunin, TPAMI'20] — the "HNSW Two-tower" baseline.
+
+Incremental-insert hierarchical navigable small world over item
+embeddings (inner-product or L2).  This is the index the paper replaces:
+it must be RECONSTRUCTED offline when item embeddings move (the paper's
+Table 1: 1.5-2 h on the Douyin corpus), which is exactly the index-
+immediacy gap benchmarks/bench_index_build.py measures against streaming
+VQ's in-step assignment.
+
+numpy implementation (the baseline is a CPU-side index in production too);
+sized for the offline benchmarks (10^4-10^6 items).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import List, Optional
+
+import numpy as np
+
+
+class HNSW:
+    def __init__(self, dim: int, m: int = 16, ef_construction: int = 100,
+                 metric: str = "ip", seed: int = 0):
+        self.dim = dim
+        self.m = m
+        self.m0 = 2 * m
+        self.ef_construction = ef_construction
+        self.metric = metric
+        self.ml = 1.0 / np.log(m)
+        self.rng = np.random.default_rng(seed)
+        self.vectors: List[np.ndarray] = []
+        self.levels: List[int] = []
+        # neighbors[level][node] -> list of neighbor ids
+        self.neighbors: List[dict] = []
+        self.entry: Optional[int] = None
+        self.max_level = -1
+
+    # -- distances ---------------------------------------------------------
+    def _dist(self, q: np.ndarray, ids) -> np.ndarray:
+        vecs = np.asarray([self.vectors[i] for i in ids])
+        if self.metric == "ip":
+            return -vecs @ q
+        d = vecs - q
+        return np.einsum("nd,nd->n", d, d)
+
+    # -- insert ------------------------------------------------------------
+    def insert(self, vec: np.ndarray) -> int:
+        nid = len(self.vectors)
+        self.vectors.append(np.asarray(vec, np.float32))
+        level = int(-np.log(self.rng.uniform(1e-12, 1.0)) * self.ml)
+        self.levels.append(level)
+        while self.max_level < level:
+            self.neighbors.append({})
+            self.max_level += 1
+        for l in range(level + 1):
+            self.neighbors[l].setdefault(nid, [])
+        if self.entry is None:
+            self.entry = nid
+            return nid
+
+        ep = [self.entry]
+        for l in range(self.max_level, level, -1):
+            ep = self._search_layer(vec, ep, 1, l)[:1]
+        for l in range(min(level, self.max_level), -1, -1):
+            cand = self._search_layer(vec, ep, self.ef_construction, l)
+            m = self.m0 if l == 0 else self.m
+            selected = cand[:m]
+            self.neighbors[l][nid] = list(selected)
+            for c in selected:
+                lst = self.neighbors[l].setdefault(c, [])
+                lst.append(nid)
+                if len(lst) > m:
+                    d = self._dist(self.vectors[c], lst)
+                    keep = np.argsort(d)[:m]
+                    self.neighbors[l][c] = [lst[i] for i in keep]
+            ep = cand
+        if self.levels[nid] >= self.levels[self.entry]:
+            self.entry = nid
+        return nid
+
+    def _search_layer(self, q: np.ndarray, entry_points: List[int],
+                      ef: int, level: int) -> List[int]:
+        """Beam search in one layer; returns ids sorted by distance."""
+        visited = set(entry_points)
+        d0 = self._dist(q, entry_points)
+        # candidates: min-heap by distance; results: max-heap (neg dist)
+        cand = [(d, i) for d, i in zip(d0, entry_points)]
+        heapq.heapify(cand)
+        res = [(-d, i) for d, i in zip(d0, entry_points)]
+        heapq.heapify(res)
+        while cand:
+            d, c = heapq.heappop(cand)
+            if res and d > -res[0][0] and len(res) >= ef:
+                break
+            for nb in self.neighbors[level].get(c, []):
+                if nb in visited:
+                    continue
+                visited.add(nb)
+                dn = float(self._dist(q, [nb])[0])
+                if len(res) < ef or dn < -res[0][0]:
+                    heapq.heappush(cand, (dn, nb))
+                    heapq.heappush(res, (-dn, nb))
+                    if len(res) > ef:
+                        heapq.heappop(res)
+        out = sorted([(-nd, i) for nd, i in res])
+        return [i for _, i in out]
+
+    # -- query -------------------------------------------------------------
+    def search(self, q: np.ndarray, k: int, ef: int = 64) -> np.ndarray:
+        if self.entry is None:
+            return np.empty((0,), np.int64)
+        ep = [self.entry]
+        for l in range(self.max_level, 0, -1):
+            ep = self._search_layer(q, ep, 1, l)[:1]
+        out = self._search_layer(q, ep, max(ef, k), 0)
+        return np.asarray(out[:k], np.int64)
+
+    @property
+    def touch_count(self) -> int:
+        """Rough per-query touched-node estimate (Table 1 row)."""
+        return self.m0 * int(np.log2(max(len(self.vectors), 2)))
+
+
+def build_hnsw(vectors: np.ndarray, m: int = 16,
+               ef_construction: int = 100, metric: str = "ip",
+               seed: int = 0) -> HNSW:
+    idx = HNSW(vectors.shape[1], m, ef_construction, metric, seed)
+    for v in vectors:
+        idx.insert(v)
+    return idx

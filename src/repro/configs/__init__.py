@@ -1,0 +1,63 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` -> module with CONFIG / SHAPES / smoke().
+Arch ids use the assignment's dashed spelling.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+_ARCH_MODULES: Dict[str, str] = {
+    # LM family
+    "smollm-360m": "repro.configs.smollm_360m",
+    "yi-9b": "repro.configs.yi_9b",
+    "qwen3-0.6b": "repro.configs.qwen3_0_6b",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b_a400m",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b_a17b",
+    # GNN
+    "mace": "repro.configs.mace",
+    # recsys
+    "din": "repro.configs.din",
+    "two-tower-retrieval": "repro.configs.two_tower_retrieval",
+    "bst": "repro.configs.bst",
+    "dlrm-rm2": "repro.configs.dlrm_rm2",
+    # the paper's own model
+    "svq": "repro.configs.svq",
+}
+
+ASSIGNED_ARCHS: List[str] = [a for a in _ARCH_MODULES if a != "svq"]
+ALL_ARCHS: List[str] = list(_ARCH_MODULES)
+
+LM_ARCHS = ["smollm-360m", "yi-9b", "qwen3-0.6b", "granite-moe-1b-a400m",
+            "llama4-maverick-400b-a17b"]
+GNN_ARCHS = ["mace"]
+RECSYS_ARCHS = ["din", "two-tower-retrieval", "bst", "dlrm-rm2"]
+
+
+def arch_module(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch])
+
+
+def get_config(arch: str):
+    return arch_module(arch).CONFIG
+
+
+def get_shapes(arch: str):
+    return arch_module(arch).SHAPES
+
+
+def get_smoke(arch: str):
+    return arch_module(arch).smoke()
+
+
+def family(arch: str) -> str:
+    if arch in LM_ARCHS:
+        return "lm"
+    if arch in GNN_ARCHS:
+        return "gnn"
+    if arch in RECSYS_ARCHS or arch == "svq":
+        return "recsys"
+    raise KeyError(arch)

@@ -1,0 +1,24 @@
+"""Granite-3.0-1B-A400M [hf:ibm-granite/granite-3.0-1b-a400m-base].
+
+MoE LM: 32 experts, top-8 routing, d_ff (per-expert) = 512.
+"""
+from repro.configs.base import LMConfig, MoEConfig, lm_shapes
+
+CONFIG = LMConfig(
+    name="granite-moe-1b-a400m",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab=49155,
+    moe=MoEConfig(n_experts=32, top_k=8),
+)
+
+SHAPES = lm_shapes()
+
+
+def smoke() -> LMConfig:
+    return LMConfig(name="granite-moe-smoke", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=64, vocab=256,
+                    moe=MoEConfig(n_experts=4, top_k=2), dtype="float32")

@@ -1,0 +1,22 @@
+"""MACE [arXiv:2206.07697] — higher-order E(3)-equivariant message passing.
+
+n_layers=2, d_hidden=128, l_max=2, correlation_order=3, n_rbf=8.
+"""
+from repro.configs.base import GNNConfig, gnn_shapes
+
+CONFIG = GNNConfig(
+    name="mace",
+    kind="mace",
+    n_layers=2,
+    d_hidden=128,
+    l_max=2,
+    correlation_order=3,
+    n_rbf=8,
+)
+
+SHAPES = gnn_shapes()
+
+
+def smoke() -> GNNConfig:
+    return GNNConfig(name="mace-smoke", kind="mace", n_layers=2, d_hidden=16,
+                     l_max=2, correlation_order=3, n_rbf=4, n_classes=8)

@@ -1,0 +1,32 @@
+"""The paper's own model: streaming VQ retriever (single- and multi-task)."""
+from repro.configs.base import SVQConfig, ShapeSpec
+
+CONFIG = SVQConfig()                       # 16K clusters, single task
+
+MULTITASK = SVQConfig(
+    name="svq-multitask",
+    n_clusters=32768,
+    n_tasks=3,                             # e.g. finish / stay-time / EVR
+    eta=(1.0, 0.5, 0.5),
+)
+
+COMPLICATED = SVQConfig(
+    name="svq-complicated",
+    ranking="complicated",
+)
+
+SHAPES = [
+    ShapeSpec("train_batch", "train", dict(batch=65536)),
+    ShapeSpec("serve_p99", "serve", dict(batch=512)),
+    ShapeSpec("serve_bulk", "serve", dict(batch=262144)),
+    ShapeSpec("retrieval_cand", "retrieval", dict(batch=1, n_candidates=1000000)),
+]
+
+
+def smoke() -> SVQConfig:
+    return SVQConfig(
+        name="svq-smoke", n_clusters=64, embed_dim=16,
+        user_tower=(32, 16), item_tower=(32, 16),
+        n_items=2000, n_users=1000, item_embed_dim=16, user_embed_dim=16,
+        user_hist_len=8, clusters_per_query=8, candidates_out=64,
+        chunk_size=4)

@@ -1,0 +1,120 @@
+"""Parameter-server analog: the real-time item -> cluster assignment table.
+
+The paper writes (ItemID -> ClusterID) into a PS the moment the training
+(or candidate) stream produces an assignment.  On TPU we model the PS as
+fixed-capacity device arrays indexed by a multiplicative hash of the item
+id, updated by scatter inside the jitted train step -- the write happens
+in the SAME step that computes the assignment, which is precisely the
+"index immediacy" property (§3.1).
+
+Besides the cluster id we persist the item's serving payload (personality
+embedding + popularity bias, Eq. 11) so a serving index (Appendix B layout:
+compact item list + cluster segment offsets, items sorted by bias inside a
+cluster) can be built at any moment without a training pause.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.freq_estimator import hash_ids
+
+
+class AssignmentStore(NamedTuple):
+    item_id: jax.Array       # (capacity,) int32 stored id (collision check)
+    cluster: jax.Array       # (capacity,) int32 cluster id, -1 = empty
+    item_emb: jax.Array      # (capacity, d) personality embedding v_emb
+    item_bias: jax.Array     # (capacity,) popularity bias v_bias
+
+    @property
+    def capacity(self) -> int:
+        return self.cluster.shape[0]
+
+
+def init_store(capacity: int, dim: int) -> AssignmentStore:
+    return AssignmentStore(
+        item_id=jnp.full((capacity,), -1, jnp.int32),
+        cluster=jnp.full((capacity,), -1, jnp.int32),
+        item_emb=jnp.zeros((capacity, dim), jnp.float32),
+        item_bias=jnp.zeros((capacity,), jnp.float32))
+
+
+def write(store: AssignmentStore, ids: jax.Array, cluster: jax.Array,
+          v_emb: jax.Array, v_bias: jax.Array,
+          valid: jax.Array | None = None) -> AssignmentStore:
+    """Real-time assignment write-back (impression or candidate stream)."""
+    slots = hash_ids(ids, store.capacity)
+    if valid is None:
+        valid = jnp.ones(ids.shape, bool)
+    # Invalid rows re-write their current content (scatter no-op).
+    cur_id = store.item_id[slots]
+    cur_cl = store.cluster[slots]
+    cur_emb = store.item_emb[slots]
+    cur_bias = store.item_bias[slots]
+    wid = jnp.where(valid, ids.astype(jnp.int32), cur_id)
+    wcl = jnp.where(valid, cluster.astype(jnp.int32), cur_cl)
+    wemb = jnp.where(valid[:, None], v_emb.astype(jnp.float32), cur_emb)
+    wbias = jnp.where(valid, v_bias.astype(jnp.float32), cur_bias)
+    return AssignmentStore(
+        item_id=store.item_id.at[slots].set(wid),
+        cluster=store.cluster.at[slots].set(wcl),
+        item_emb=store.item_emb.at[slots].set(wemb),
+        item_bias=store.item_bias.at[slots].set(wbias))
+
+
+def read_cluster(store: AssignmentStore, ids: jax.Array) -> jax.Array:
+    return store.cluster[hash_ids(ids, store.capacity)]
+
+
+class ServingIndex(NamedTuple):
+    """Appendix-B layout: compact item list segmented by cluster.
+
+    Items inside a cluster are sorted by descending popularity bias, which
+    is exactly the pre-sorted per-cluster list the merge-sort serving
+    stage (Alg. 1) consumes.
+    """
+    item_ids: jax.Array      # (n,) int32
+    item_emb: jax.Array      # (n, d)
+    item_bias: jax.Array     # (n,) sorted desc within each segment
+    cluster_of: jax.Array    # (n,) int32
+    offsets: jax.Array       # (K+1,) int32 segment starts
+
+    @property
+    def n_items(self) -> int:
+        return self.item_ids.shape[0]
+
+
+def build_serving_index(store: AssignmentStore,
+                        n_clusters: int) -> ServingIndex:
+    """Sort occupied slots by (cluster asc, bias desc) -> segments.
+
+    Empty slots (cluster == -1) sort to the end of a sentinel segment and
+    are excluded via the offsets table.  Runs fully on device; in prod
+    this is the asynchronous "candidate scanning" step (§3.1), which never
+    blocks training.
+    """
+    occupied = store.cluster >= 0
+    cl = jnp.where(occupied, store.cluster, n_clusters)
+    # Composite sort key: cluster major, -bias minor (stable argsort).
+    order = jnp.lexsort((-store.item_bias, cl))
+    cl_sorted = cl[order]
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(cl_sorted, jnp.int32), cl_sorted, n_clusters + 1)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts[:n_clusters])])
+    return ServingIndex(
+        item_ids=store.item_id[order],
+        item_emb=store.item_emb[order],
+        item_bias=store.item_bias[order],
+        cluster_of=cl_sorted.astype(jnp.int32),
+        offsets=offsets.astype(jnp.int32))
+
+
+def collision_rate(store: AssignmentStore, ids: jax.Array) -> jax.Array:
+    """Fraction of ids whose slot currently holds a DIFFERENT id."""
+    slots = hash_ids(ids, store.capacity)
+    held = store.item_id[slots]
+    return jnp.mean(((held >= 0) & (held != ids.astype(jnp.int32)))
+                    .astype(jnp.float32))

@@ -1,0 +1,129 @@
+"""K-way chunked merge-sort serving (paper §3.4, Alg. 1, Fig. 2).
+
+Per query: the indexing step scores clusters by u.Q(v_emb); items inside a
+cluster share that personality score and are pre-ranked by their
+popularity bias (serving index keeps segments sorted by bias desc).  The
+combined score is  u.Q(v_emb) + v_bias  (Eq. 11), so each cluster's list
+is already sorted by combined score, and selecting the global top-S is a
+k-way merge.  Alg. 1 pops the max-head cluster and takes a whole CHUNK
+(size l=8) of its items per pop ("we can stand some mistakes").
+
+TPU adaptation (DESIGN.md §3): a binary heap is pointer-chasing and
+serial; but a heap-pop is just argmax over the C head scores (C =
+clusters_per_query, e.g. 128).  We implement Alg. 1 as a lax.scan of S/l
+steps, each doing an argmax over C running heads -- bit-identical pop
+order to the heap under distinct scores, fully vectorizable and vmappable
+over queries.  A numpy heapq oracle is kept for verification and the
+merge-sort benchmark.
+"""
+from __future__ import annotations
+
+import heapq
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG = -1e30
+
+
+def merge_sort_serve_np(cluster_scores: np.ndarray,
+                        bias_lists: np.ndarray,
+                        lengths: np.ndarray,
+                        chunk: int,
+                        target: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Faithful Alg. 1 with a real heap.
+
+    cluster_scores: (C,) personality score per selected cluster.
+    bias_lists: (C, L) per-cluster item biases sorted desc (padded).
+    lengths: (C,) valid lengths.
+    Returns (flat_positions, combined_scores) of <= target items; positions
+    are c * L + i.
+    """
+    C, L = bias_lists.shape
+    heap = []  # (-score, cluster, ptr)
+    ptr = np.zeros(C, np.int64)
+    for c in range(C):
+        if lengths[c] > 0:
+            heapq.heappush(
+                heap, (-(cluster_scores[c] + bias_lists[c, 0]), c))
+    out_pos, out_score = [], []
+    while heap and len(out_pos) < target:
+        _, c = heapq.heappop(heap)
+        take = min(chunk, int(lengths[c]) - int(ptr[c]))
+        for i in range(int(ptr[c]), int(ptr[c]) + take):
+            out_pos.append(c * L + i)
+            out_score.append(cluster_scores[c] + bias_lists[c, i])
+        ptr[c] += take
+        if ptr[c] < lengths[c]:
+            heapq.heappush(
+                heap, (-(cluster_scores[c] + bias_lists[c, ptr[c]]), c))
+    out_pos = np.asarray(out_pos[:target], np.int64)
+    out_score = np.asarray(out_score[:target], np.float64)
+    return out_pos, out_score
+
+
+@partial(jax.jit, static_argnames=("chunk", "target", "exact"))
+def merge_sort_serve(cluster_scores: jax.Array,
+                     bias_lists: jax.Array,
+                     lengths: jax.Array,
+                     chunk: int,
+                     target: int,
+                     exact: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """TPU-native Alg. 1: scan of (argmax over heads, take chunk).
+
+    Same arguments as the numpy oracle; returns (positions, scores) padded
+    with (-1, NEG) if fewer than ``target`` items exist.  vmap over the
+    leading axis for batched queries.
+
+    ``exact=True`` budgets ceil(target/chunk) + C pops (each pop either
+    yields a full chunk or exhausts one of the C clusters, so this bound
+    guarantees heap-oracle-identical output); ``exact=False`` budgets only
+    ceil(target/chunk) pops -- cheaper, may under-fill when many clusters
+    hold < chunk items.
+    """
+    C, L = bias_lists.shape
+    n_steps = -(-target // chunk) + (C if exact else 0)
+    arange_chunk = jnp.arange(chunk)
+
+    def head_score(ptr):
+        b = jnp.take_along_axis(
+            bias_lists, jnp.minimum(ptr, L - 1)[:, None], axis=1)[:, 0]
+        s = cluster_scores + b
+        return jnp.where(ptr < lengths, s, NEG)
+
+    def step(carry, _):
+        ptr, n_out = carry
+        scores = head_score(ptr)
+        c = jnp.argmax(scores)
+        base = ptr[c]
+        idx = base + arange_chunk
+        valid = ((idx < lengths[c]) & (scores[c] > NEG / 2)
+                 & (n_out < target))
+        pos = jnp.where(valid, c * L + idx, -1)
+        sc = jnp.where(valid, cluster_scores[c] + bias_lists[c, :][
+            jnp.minimum(idx, L - 1)], NEG)
+        return (ptr.at[c].add(chunk), n_out + jnp.sum(valid)), (pos, sc)
+
+    ptr0 = jnp.zeros((C,), jnp.int32)
+    _, (pos, sc) = jax.lax.scan(step, (ptr0, jnp.int32(0)), None,
+                                length=n_steps)
+    pos, sc = pos.reshape(-1), sc.reshape(-1)
+    # Compact valid entries forward, preserving pop order (matches the
+    # heap oracle's contiguous output even when chunks were partial).
+    order = jnp.argsort(pos < 0, stable=True)
+    return pos[order][:target], sc[order][:target]
+
+
+def full_sort_topk(cluster_scores: jax.Array, bias_lists: jax.Array,
+                   lengths: jax.Array, target: int
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Exact top-``target`` over all (cluster, item) pairs (quality ref)."""
+    C, L = bias_lists.shape
+    combined = cluster_scores[:, None] + bias_lists
+    mask = jnp.arange(L)[None, :] < lengths[:, None]
+    flat = jnp.where(mask, combined, NEG).reshape(-1)
+    sc, pos = jax.lax.top_k(flat, target)
+    return jnp.where(sc > NEG / 2, pos, -1), sc

@@ -1,0 +1,273 @@
+"""The streaming VQ retriever: indexing step + ranking step (paper Fig. 1).
+
+Functional model:  params (gradient-trained)  +  IndexState (EMA / PS
+tables, updated in the SAME jitted train step -- index immediacy, §3.1).
+
+train_step consumes one impression-stream batch and (optionally) one
+candidate-stream batch; both update the item->cluster assignment store in
+real time.  serve() runs the two-step retrieval: cluster ranking
+(u.Q(v_emb)), k-way merge-sort candidate generation (Alg. 1), and the
+ranking-step model to produce the final ordered set.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SVQConfig
+from repro.core import assignment_store as astore
+from repro.core import freq_estimator as freq
+from repro.core import losses, merge_sort, ranking, vq
+from repro.models.dense import init_mlp, mlp
+from repro.models.recsys import embedding as emb
+from repro.configs.base import EmbeddingSpec
+from repro.utils.sharding import shard, batch_spec, current_mesh
+
+Params = Dict[str, Any]
+
+
+class IndexState(NamedTuple):
+    """Non-gradient state: codebook, PS tables, step counter."""
+    vq: vq.VQState
+    store: astore.AssignmentStore
+    freq: freq.FreqState
+    step: jax.Array
+
+
+def _table_specs(cfg: SVQConfig) -> Tuple[EmbeddingSpec, ...]:
+    return (
+        EmbeddingSpec("user_id", cfg.n_users, cfg.user_embed_dim),
+        EmbeddingSpec("item_id", cfg.n_items, cfg.item_embed_dim),
+        EmbeddingSpec("item_cate", 4096, cfg.item_embed_dim),
+    )
+
+
+def d_feature_dims(cfg: SVQConfig) -> Tuple[int, int]:
+    d_user_in = cfg.user_embed_dim + cfg.item_embed_dim
+    d_item_in = 2 * cfg.item_embed_dim
+    return d_user_in, d_item_in
+
+
+def init(key: jax.Array, cfg: SVQConfig) -> Tuple[Params, IndexState]:
+    kt, ki, ku, kr, kv = jax.random.split(key, 5)
+    d_user_in, d_item_in = d_feature_dims(cfg)
+    params: Params = {
+        "tables": emb.init_tables(kt, _table_specs(cfg)),
+        # item tower outputs personality embedding + popularity bias
+        "item_tower": init_mlp(ki, d_item_in,
+                               cfg.item_tower[:-1] + (cfg.embed_dim + 1,)),
+        # one user tower per task (stacked)
+        "user_towers": jax.vmap(
+            lambda k: init_mlp(k, d_user_in,
+                               cfg.user_tower[:-1] + (cfg.embed_dim,)))(
+            jax.random.split(ku, cfg.n_tasks)),
+        "rank": ranking.init_ranking(kr, cfg, d_user_in, d_item_in),
+    }
+    state = IndexState(
+        vq=vq.init_vq(kv, cfg.n_clusters, cfg.embed_dim),
+        store=astore.init_store(cfg.n_items, cfg.embed_dim),
+        freq=freq.init_freq(cfg.n_items),
+        step=jnp.zeros((), jnp.int32))
+    return params, state
+
+
+# ---------------------------------------------------------------------------
+# Feature extraction (embeddings shared by indexing + ranking steps)
+# ---------------------------------------------------------------------------
+
+def user_features(params: Params, user_id: jax.Array,
+                  hist: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """-> (user_feat (B, d_u_in), hist_emb (B, H, d_e))."""
+    uid = emb.lookup(params["tables"]["user_id"], user_id)
+    hist_emb = emb.lookup(params["tables"]["item_id"], hist)
+    hist_pool = jnp.mean(hist_emb, axis=-2)
+    return jnp.concatenate([uid, hist_pool], -1), hist_emb
+
+
+def item_features(params: Params, item_id: jax.Array,
+                  item_cate: jax.Array) -> jax.Array:
+    iid = emb.lookup(params["tables"]["item_id"], item_id)
+    cat = emb.lookup(params["tables"]["item_cate"], item_cate)
+    return jnp.concatenate([iid, cat], -1)
+
+
+def index_forward(params: Params, cfg: SVQConfig, user_feat: jax.Array,
+                  item_feat: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Indexing-step towers -> (u (P,B,d), v_emb (B,d), v_bias (B,))."""
+    u = jax.vmap(lambda tw: mlp(tw, user_feat))(params["user_towers"])
+    v_all = mlp(params["item_tower"], item_feat)
+    v_emb, v_bias = v_all[..., :-1], v_all[..., -1]
+    return u, v_emb, v_bias
+
+
+# ---------------------------------------------------------------------------
+# Training step
+# ---------------------------------------------------------------------------
+
+def train_step(params: Params, state: IndexState, cfg: SVQConfig,
+               batch: Dict[str, jax.Array],
+               cand_batch: Optional[Dict[str, jax.Array]] = None,
+               use_kernel: bool = False):
+    """One impression-stream step.  Returns (grads, new_state, metrics).
+
+    The caller owns the optimizer (see train/loop.py); grads cover only
+    ``params``.  ``batch``: user_id (B,), hist (B,H), item_id (B,),
+    item_cate (B,), labels (B,P) rewards in [0, inf).
+    """
+    bspec = batch_spec(current_mesh())
+    step = state.step + 1
+
+    # -- streaming frequency estimation (also = popularity for Eq. 7) ----
+    new_freq, delta = freq.update(state.freq, batch["item_id"], step)
+    logq = freq.log_q(delta) if cfg.logq_debias else None
+
+    def loss_fn(p):
+        user_feat, hist_emb = user_features(p, batch["user_id"],
+                                            batch["hist"])
+        item_feat = item_features(p, batch["item_id"], batch["item_cate"])
+        user_feat = shard(user_feat, P(bspec[0] if len(bspec) else None,
+                                       None))
+        u, v_emb, v_bias = index_forward(p, cfg, user_feat, item_feat)
+
+        # Eq. 10 assignment (no gradient through assignment itself)
+        assignment = vq.assign(state.vq, jax.lax.stop_gradient(v_emb),
+                               cfg.disturbance_s, use_kernel=use_kernel)
+        e_st = vq.quantize(state.vq, v_emb, assignment)
+
+        labels = batch["labels"]                     # (B, P) rewards
+        total = 0.0
+        per_task = {}
+        ldt = jnp.bfloat16 if cfg.logits_dtype == "bfloat16" else None
+        for t in range(cfg.n_tasks):
+            pos = labels[:, t] > 0
+            la = losses.l_aux(u[t], v_emb, v_bias, logq, valid=pos,
+                              dtype=ldt)
+            li = losses.l_ind(u[t], v_emb, e_st, v_bias, logq, valid=pos,
+                              dtype=ldt)
+            total = total + la + li
+            per_task[f"l_aux_{t}"] = la
+            per_task[f"l_ind_{t}"] = li
+        if cfg.use_l_sim:   # §3.2 ablation: vanilla VQ-VAE commitment
+            lsim = losses.l_sim(v_emb, state.vq.embeddings()[assignment])
+            total = total + lsim
+            per_task["l_sim"] = lsim
+
+        # ranking step (shared embeddings, own towers)
+        cross = v_emb * u[0] if False else (
+            item_feat[..., :cfg.item_embed_dim]
+            * user_feat[..., -cfg.item_embed_dim:])
+        rlogits = ranking.ranking_scores(p["rank"], cfg, user_feat,
+                                         item_feat, hist_emb, cross)
+        lrank = 0.0
+        for t in range(cfg.n_tasks):
+            lr = losses.bce_logits(rlogits[t], (labels[:, t] > 0)
+                                   .astype(rlogits.dtype))
+            lrank = lrank + lr
+            per_task[f"l_rank_{t}"] = lr
+        total = total + lrank
+        aux = dict(assignment=assignment, v_emb=v_emb, v_bias=v_bias,
+                   metrics=per_task)
+        return total, aux
+
+    (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    assignment = aux["assignment"]
+    v_emb = jax.lax.stop_gradient(aux["v_emb"])
+    v_bias = jax.lax.stop_gradient(aux["v_bias"])
+
+    # -- EMA codebook update, popularity/reward weighted (Eq. 7-9, 12-13) -
+    rewards = batch["labels"] if cfg.n_tasks > 1 else None
+    impressed = jnp.max(batch["labels"], axis=-1) >= 0   # all impressions
+    weight = vq.popularity_weight(
+        delta, cfg.beta, rewards=rewards,
+        eta=cfg.eta if cfg.n_tasks > 1 else None, valid=impressed)
+    new_vq = vq.ema_update(state.vq, v_emb, assignment, weight,
+                           cfg.ema_alpha)
+
+    # -- real-time PS write-back (index immediacy) ------------------------
+    new_store = astore.write(state.store, batch["item_id"], assignment,
+                             v_emb, v_bias)
+
+    # -- candidate stream: forward-only assignment refresh (§3.1) ---------
+    if cand_batch is not None:
+        c_feat = item_features(params, cand_batch["item_id"],
+                               cand_batch["item_cate"])
+        cv_all = mlp(params["item_tower"], c_feat)
+        cv_emb, cv_bias = cv_all[..., :-1], cv_all[..., -1]
+        c_assign = vq.assign(new_vq, cv_emb, cfg.disturbance_s,
+                             use_kernel=use_kernel)
+        new_store = astore.write(new_store, cand_batch["item_id"], c_assign,
+                                 cv_emb, cv_bias)
+
+    new_state = IndexState(vq=new_vq, store=new_store, freq=new_freq,
+                           step=step)
+    metrics = dict(loss=loss, **aux["metrics"],
+                   **vq.cluster_usage_stats(new_vq, assignment))
+    return grads, new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving (indexing step -> merge sort -> ranking step)
+# ---------------------------------------------------------------------------
+
+def rank_clusters(state: IndexState, u: jax.Array, n: int
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Eq. 5/11 cluster ranking: top-n clusters by u.e_k (per query)."""
+    e = state.vq.embeddings()
+    scores = u @ e.T                               # (B, K)
+    return jax.lax.top_k(scores, n)
+
+
+def serve(params: Params, state: IndexState, cfg: SVQConfig,
+          index: astore.ServingIndex, batch: Dict[str, jax.Array],
+          items_per_cluster: int = 256, task: int = 0
+          ) -> Dict[str, jax.Array]:
+    """Full retrieval for a user batch -> final candidate ids + scores."""
+    user_feat, hist_emb = user_features(params, batch["user_id"],
+                                        batch["hist"])
+    u = jax.vmap(lambda tw: mlp(tw, user_feat))(params["user_towers"])[task]
+
+    # ---- indexing step: rank clusters, fetch pre-sorted segments -------
+    top_scores, top_clusters = rank_clusters(state, u, cfg.clusters_per_query)
+    starts = index.offsets[top_clusters]                     # (B, C)
+    counts = index.offsets[top_clusters + 1] - starts
+    L = items_per_cluster
+    slab = starts[..., None] + jnp.arange(L)[None, None, :]  # (B, C, L)
+    slab = jnp.minimum(slab, index.n_items - 1)
+    lengths = jnp.minimum(counts, L)
+    bias = index.item_bias[slab]                             # (B, C, L)
+
+    # ---- Alg. 1 merge sort over (cluster personality + item bias) ------
+    S = cfg.candidates_out
+    pos, msort_scores = jax.vmap(
+        lambda cs, bl, ln: merge_sort.merge_sort_serve(
+            cs, bl, ln, cfg.chunk_size, S))(top_scores, bias, lengths)
+    valid = pos >= 0
+    c_idx = jnp.clip(pos, 0) // L
+    i_idx = jnp.clip(pos, 0) % L
+    flat = jnp.take_along_axis(
+        slab.reshape(slab.shape[0], -1),
+        (c_idx * L + i_idx).astype(jnp.int32), axis=1)       # (B, S)
+    cand_ids = index.item_ids[flat]
+    cand_emb = index.item_emb[flat]
+    cand_bias = index.item_bias[flat]
+
+    # ---- ranking step over the compact candidate set -------------------
+    # ("VQ Two-tower" or "VQ Complicated" per cfg.ranking, §3.5)
+    cand_cate = jnp.zeros_like(cand_ids)      # cate refetched via tables
+    item_feat = item_features(params, cand_ids, cand_cate)
+    cross = (item_feat[..., :cfg.item_embed_dim]
+             * user_feat[..., None, -cfg.item_embed_dim:])
+    rscores = ranking.ranking_scores(params["rank"], cfg, user_feat,
+                                     item_feat, hist_emb, cross)[task]
+    rscores = jnp.where(valid, rscores, merge_sort.NEG)
+    order = jnp.argsort(-rscores, axis=-1)
+    return dict(
+        item_ids=jnp.take_along_axis(cand_ids, order, axis=1),
+        scores=jnp.take_along_axis(rscores, order, axis=1),
+        merge_scores=msort_scores,
+        index_ids=cand_ids,
+        valid=jnp.take_along_axis(valid, order, axis=1))

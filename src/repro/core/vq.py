@@ -1,0 +1,136 @@
+"""Streaming vector quantization: codebook state, assignment, EMA updates.
+
+Implements the paper's Eq. 2-3 (quantization), Eq. 7-9 (popularity-weighted
+EMA with counters), Eq. 10 (disturbance-balanced assignment) and the
+multi-task reward weighting of Eq. 12-13.
+
+The codebook is kept as the *pair* (w, c): ``w`` is the EMA numerator
+("preliminary cluster embedding"), ``c`` the EMA'd appearance counter, and
+the served embedding is ``e = w / c`` (Eq. 9).  Cluster embeddings receive
+NO gradients: they move only by EMA; items receive the cluster's gradient
+through a straight-through estimator in the losses (see losses.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class VQState(NamedTuple):
+    w: jax.Array            # (K, d) EMA numerator
+    c: jax.Array            # (K,)  EMA counter
+
+    @property
+    def n_clusters(self) -> int:
+        return self.w.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.w.shape[1]
+
+    def embeddings(self) -> jax.Array:
+        """Eq. 9: e_k = w_k / c_k."""
+        return self.w / jnp.maximum(self.c, 1e-6)[:, None]
+
+
+def init_vq(key: jax.Array, n_clusters: int, dim: int,
+            dtype=jnp.float32) -> VQState:
+    w = jax.random.normal(key, (n_clusters, dim), dtype) * 0.1
+    c = jnp.ones((n_clusters,), dtype)
+    return VQState(w=w, c=c)
+
+
+def disturbance(c: jax.Array, s: float) -> jax.Array:
+    """Eq. 10 discount r_k = min(c_k / (mean c) * s, 1).
+
+    Clusters whose EMA'd impression counter is below 1/s of the average get
+    their distance discounted (boosted) during nearest-cluster search.
+    """
+    mean_c = jnp.mean(c)
+    return jnp.minimum(c / jnp.maximum(mean_c, 1e-6) * s, 1.0)
+
+
+def assign(vq: VQState, v: jax.Array, s: float = 5.0,
+           use_kernel: bool = False) -> jax.Array:
+    """Eq. 10: k* = argmin_k ||e_k - v||^2 * r_k.
+
+    Rewritten MXU-form: ||e_k - v||^2 = ||v||^2 - 2 v.e_k + ||e_k||^2; the
+    ||v||^2 term is constant per item but NOT per cluster once multiplied
+    by r_k, so it must be kept (r * dist is not monotone in dist alone).
+    """
+    e = vq.embeddings()
+    r = disturbance(vq.c, s)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.vq_assign(v, e, r)
+    v = v.astype(jnp.float32)
+    e = e.astype(jnp.float32)
+    d2 = (jnp.sum(v * v, axis=-1, keepdims=True)
+          - 2.0 * v @ e.T
+          + jnp.sum(e * e, axis=-1)[None, :])
+    scores = jnp.maximum(d2, 0.0) * r[None, :]
+    return jnp.argmin(scores, axis=-1).astype(jnp.int32)
+
+
+def ema_update(vq: VQState, v: jax.Array, assignment: jax.Array,
+               weight: jax.Array, alpha: float) -> VQState:
+    """Batched Eq. 7-8 (single-task) / Eq. 12-13 (weight carries rewards).
+
+    Per streaming batch: w_k <- alpha*w_k + (1-alpha)*sum_{j->k} weight_j*v_j
+                         c_k <- alpha*c_k + (1-alpha)*sum_{j->k} weight_j
+    ``weight_j`` = (delta_j)^beta  [* prod_p (1+h_jp)^eta_p for multi-task].
+    """
+    k = vq.n_clusters
+    v32 = v.astype(jnp.float32)
+    w_add = jax.ops.segment_sum(weight[:, None] * v32, assignment, k)
+    c_add = jax.ops.segment_sum(weight, assignment, k)
+    w = alpha * vq.w + (1.0 - alpha) * w_add
+    c = alpha * vq.c + (1.0 - alpha) * c_add
+    return VQState(w=w, c=c)
+
+
+def popularity_weight(delta: jax.Array, beta: float,
+                      rewards: Optional[jax.Array] = None,
+                      eta: Optional[Tuple[float, ...]] = None,
+                      valid: Optional[jax.Array] = None) -> jax.Array:
+    """(delta^beta) * prod_p (1 + h_jp)^eta_p   (Eq. 7 / Eq. 12 weights).
+
+    delta: (B,) per-item occurrence interval from the freq estimator.
+    rewards: (B, P) per-task rewards h_jp >= 0 (None for single task).
+    valid: (B,) bool mask; invalid rows contribute zero weight.
+    """
+    w = jnp.power(jnp.maximum(delta, 1e-6), beta)
+    if rewards is not None:
+        assert eta is not None and len(eta) == rewards.shape[-1]
+        eta_arr = jnp.asarray(eta, dtype=w.dtype)
+        w = w * jnp.prod(jnp.power(1.0 + rewards, eta_arr[None, :]), axis=-1)
+    if valid is not None:
+        w = jnp.where(valid, w, 0.0)
+    return w
+
+
+def quantize(vq: VQState, v: jax.Array, assignment: jax.Array) -> jax.Array:
+    """Eq. 3 with straight-through: e = v + sg(Q(v) - v).
+
+    Gradients of the quantized embedding flow to the item embedding v
+    ("items rather than clusters receive gradients of clusters").
+    """
+    e = vq.embeddings()[assignment].astype(v.dtype)
+    return v + jax.lax.stop_gradient(e - v)
+
+
+def cluster_usage_stats(vq: VQState, assignment: jax.Array) -> dict:
+    """Balance diagnostics for Fig. 4-style reporting."""
+    k = vq.n_clusters
+    counts = jax.ops.segment_sum(jnp.ones_like(assignment, jnp.float32),
+                                 assignment, k)
+    p = counts / jnp.maximum(jnp.sum(counts), 1.0)
+    entropy = -jnp.sum(jnp.where(p > 0, p * jnp.log(p), 0.0))
+    return dict(
+        used_clusters=jnp.sum(counts > 0),
+        max_cluster=jnp.max(counts),
+        usage_entropy=entropy,
+        perplexity=jnp.exp(entropy),
+    )

@@ -1,0 +1,4 @@
+from repro.data.streaming import (RecsysStream, StreamConfig,
+                                  batched_molecules, fanout_sample,
+                                  lm_batch, make_csr,
+                                  random_geometric_graph)

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+vq_assign        — Eq. 10 nearest-cluster search over 16K-32K clusters
+                   (MXU matmul + online running-(min,argmin) over K blocks)
+inbatch_softmax  — fused L_aux/L_ind in-batch CE (online logsumexp,
+                   (B,B) logits never hit HBM)
+topk_dot         — retrieval_cand: fused 1xD * Dx1M scoring + two-stage
+                   top-k
+embedding_bag    — fused gather+reduce over HBM-resident tables (scalar-
+                   prefetch indices + per-row DMA)
+flash_attention  — causal flash attention (LM train/prefill hot spot)
+
+Each kernel: pl.pallas_call + explicit BlockSpec VMEM tiling, a jit'd
+wrapper in ops.py (interpret=True off-TPU), and a pure-jnp oracle in
+ref.py; tests sweep shapes/dtypes and assert_allclose against the oracle.
+"""
+from repro.kernels import ops, ref

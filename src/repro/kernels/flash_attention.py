@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: causal flash attention (single head).
+
+The LM-family training/prefill hot spot.  Same online-softmax recurrence
+as models/lm/attention.attention_flash_scan (the lowering used by the
+dry-run); this kernel is the VMEM-tiled version: grid (q blocks, kv
+blocks), running (acc, m, l) carried in the output/scratch refs, causal
+blocks skipped by masking (fully-masked blocks still execute — Mosaic
+grid is sequential — but contribute zeros).
+
+Block defaults (bq=bkv=256, hd<=128): q 128 KiB + k/v 256 KiB + scores
+256 KiB ~ 0.7 MiB VMEM, MXU-aligned (multiples of (8, 128)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, bq: int, bkv: int, n_kv: int, causal: bool):
+    i = pl.program_id(0)          # q block
+    j = pl.program_id(1)          # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full((bq,), NEG, jnp.float32)
+        l_ref[...] = jnp.zeros((bq,), jnp.float32)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)                  # (bq, hd)
+    k = k_ref[...].astype(jnp.float32)                  # (bkv, hd)
+    v = v_ref[...].astype(jnp.float32)
+    scale = q.shape[-1] ** -0.5
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = i * bq + jax.lax.iota(jnp.int32, bq)
+        kpos = j * bkv + jax.lax.iota(jnp.int32, bkv)
+        s = jnp.where(kpos[None, :] <= qpos[:, None], s, NEG)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_kv - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...]
+                      / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                      ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True, block_q: int = 256,
+                           block_kv: int = 256,
+                           interpret: bool = True) -> jax.Array:
+    """q, k, v: (S, hd) single head -> (S, hd)."""
+    s, hd = q.shape
+    bq = min(block_q, s)
+    bkv = min(block_kv, s)
+    assert s % bq == 0 and s % bkv == 0, (s, bq, bkv)
+    grid = (s // bq, s // bkv)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bkv=bkv, n_kv=grid[1],
+                          causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, hd), lambda i, j: (i, 0)),
+            pl.BlockSpec((bkv, hd), lambda i, j: (j, 0)),
+            pl.BlockSpec((bkv, hd), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, hd), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq, hd), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, hd), q.dtype),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+            jax.ShapeDtypeStruct((s, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[0]

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: fused in-batch softmax CE (L_aux / L_ind hot path).
+
+Computes per-row  logsumexp_r(u_o . v_r + bias_r - logQ_r) - logit_oo
+without materializing the (B, B) logits matrix in HBM: the column axis is
+blocked and reduced with the online-logsumexp recurrence; the diagonal
+(positive) logit is captured when the row block meets the column block.
+
+VMEM per step (bB=bC=256, d<=256): three 256 KiB tiles + 256 KiB logits.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _inbatch_kernel(u_ref, v_ref, bias_ref, logq_ref,
+                    loss_ref, m_ref, l_ref, diag_ref,
+                    *, bb: int, bc: int, n_col: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    u = u_ref[...].astype(jnp.float32)                   # (bB, d)
+    v = v_ref[...].astype(jnp.float32)                   # (bC, d)
+    logits = jax.lax.dot_general(
+        u, v, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (bB, bC)
+    logits = logits + bias_ref[...][None, :]
+    logits = logits - logq_ref[...][None, :]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full((bb,), NEG, jnp.float32)
+        l_ref[...] = jnp.zeros((bb,), jnp.float32)
+        diag_ref[...] = jnp.zeros((bb,), jnp.float32)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_blk = jnp.max(logits, axis=-1)
+    m_new = jnp.maximum(m_prev, m_blk)
+    l_new = l_prev * jnp.exp(m_prev - m_new) \
+        + jnp.sum(jnp.exp(logits - m_new[:, None]), axis=-1)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    # diagonal capture: global row index == global col index
+    rows = i * bb + jax.lax.iota(jnp.int32, bb)
+    cols = j * bc + jax.lax.iota(jnp.int32, bc)
+    hit = rows[:, None] == cols[None, :]
+    diag_ref[...] = diag_ref[...] + jnp.sum(
+        jnp.where(hit, logits, 0.0), axis=-1)
+
+    @pl.when(j == n_col - 1)
+    def _finish():
+        loss_ref[...] = m_ref[...] + jnp.log(l_ref[...]) - diag_ref[...]
+
+
+def inbatch_softmax_pallas(u: jax.Array, v: jax.Array, bias: jax.Array,
+                           log_q: jax.Array | None = None,
+                           block_b: int = 256, block_c: int = 256,
+                           interpret: bool = True) -> jax.Array:
+    """u: (B,d), v: (B,d), bias: (B,), log_q: (B,) -> per-row loss (B,)."""
+    b, d = u.shape
+    if log_q is None:
+        log_q = jnp.zeros((b,), jnp.float32)
+    pb = (-b) % block_b
+    pc = (-b) % block_c
+    u_p = jnp.pad(u, ((0, pb), (0, 0)))
+    # padded columns get -inf logits via huge logQ
+    v_p = jnp.pad(v, ((0, pc), (0, 0)))
+    bias_p = jnp.pad(bias, (0, pc))
+    logq_p = jnp.pad(log_q, (0, pc), constant_values=-NEG)
+    bp, cp = b + pb, b + pc
+    grid = (bp // block_b, cp // block_c)
+
+    out = pl.pallas_call(
+        functools.partial(_inbatch_kernel, bb=block_b, bc=block_c,
+                          n_col=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_c, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_c,), lambda i, j: (j,)),
+            pl.BlockSpec((block_c,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp,), jnp.float32),   # loss
+            jax.ShapeDtypeStruct((bp,), jnp.float32),   # m carry
+            jax.ShapeDtypeStruct((bp,), jnp.float32),   # l carry
+            jax.ShapeDtypeStruct((bp,), jnp.float32),   # diag carry
+        ],
+        interpret=interpret,
+    )(u_p, v_p, bias_p, logq_p)
+    return out[0][:b]

@@ -1,0 +1,60 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; everywhere else (this CPU container)
+they execute in interpret mode, which runs the kernel body in Python and
+is what the per-kernel allclose tests validate against ref.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.inbatch_softmax import inbatch_softmax_pallas
+from repro.kernels.topk_dot import topk_dot_pallas
+from repro.kernels.vq_assign import vq_assign_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_b", "block_k"))
+def vq_assign(v: jax.Array, e: jax.Array, r: jax.Array,
+              block_b: int = 256, block_k: int = 512) -> jax.Array:
+    return vq_assign_pallas(v, e, r, block_b, block_k,
+                            interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("combiner", "block_b"))
+def embedding_bag(table: jax.Array, ids: jax.Array, combiner: str = "sum",
+                  block_b: int = 8) -> jax.Array:
+    return embedding_bag_pallas(table, ids, combiner, block_b,
+                                interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("k", "block_n"))
+def topk_dot(u: jax.Array, items: jax.Array, bias: jax.Array, k: int,
+             block_n: int = 4096) -> Tuple[jax.Array, jax.Array]:
+    return topk_dot_pallas(u, items, bias, k, block_n,
+                           interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_kv"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, block_q: int = 256,
+                    block_kv: int = 256) -> jax.Array:
+    return flash_attention_pallas(q, k, v, causal, block_q, block_kv,
+                                  interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("block_b", "block_c"))
+def inbatch_softmax(u: jax.Array, v: jax.Array, bias: jax.Array,
+                    log_q: Optional[jax.Array] = None,
+                    block_b: int = 256, block_c: int = 256) -> jax.Array:
+    return inbatch_softmax_pallas(u, v, bias, log_q, block_b, block_c,
+                                  interpret=not _on_tpu())

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def vq_assign_ref(v: jax.Array, e: jax.Array, r: jax.Array) -> jax.Array:
+    """Eq. 10: argmin_k ||e_k - v||^2 * r_k.  v: (B,d), e: (K,d), r: (K,)."""
+    v = v.astype(jnp.float32)
+    e = e.astype(jnp.float32)
+    d2 = (jnp.sum(v * v, axis=-1, keepdims=True)
+          - 2.0 * v @ e.T
+          + jnp.sum(e * e, axis=-1)[None, :])
+    scores = jnp.maximum(d2, 0.0) * r[None, :]
+    return jnp.argmin(scores, axis=-1).astype(jnp.int32)
+
+
+def embedding_bag_ref(table: jax.Array, ids: jax.Array,
+                      combiner: str = "sum") -> jax.Array:
+    """ids: (B, bag) pre-hashed row indices -> (B, d)."""
+    emb = jnp.take(table, ids, axis=0)
+    s = jnp.sum(emb, axis=-2)
+    if combiner == "mean":
+        return s / ids.shape[-1]
+    return s
+
+
+def topk_dot_ref(u: jax.Array, items: jax.Array, bias: jax.Array,
+                 k: int) -> Tuple[jax.Array, jax.Array]:
+    """scores = items @ u + bias; -> (top-k values, indices)."""
+    scores = items.astype(jnp.float32) @ u.astype(jnp.float32) \
+        + bias.astype(jnp.float32)
+    return jax.lax.top_k(scores, k)
+
+
+def inbatch_softmax_ref(u: jax.Array, v: jax.Array, bias: jax.Array,
+                        log_q: Optional[jax.Array] = None) -> jax.Array:
+    """Per-row L_aux (Eq. 1 + Eq. 11 + logQ): (B,) losses."""
+    logits = (u.astype(jnp.float32) @ v.astype(jnp.float32).T
+              + bias.astype(jnp.float32)[None, :])
+    if log_q is not None:
+        logits = logits - log_q.astype(jnp.float32)[None, :]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    return logz - jnp.diagonal(logits)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """q,k,v: (S,hd) single head. -> (S,hd)."""
+    s = q.shape[0]
+    scale = q.shape[-1] ** -0.5
+    logits = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return (w @ v.astype(jnp.float32)).astype(q.dtype)

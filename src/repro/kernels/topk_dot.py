@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused candidate scoring + two-stage top-k.
+
+The ``retrieval_cand`` hot path: one query embedding against N = 10^6
+candidate items.  Stage 1 (this kernel) streams candidate blocks through
+VMEM, computes  scores = items @ u + bias  on the MXU and emits each
+block's local top-k.  Stage 2 (ops.py wrapper) reduces the
+(N/block, k) partials with one small jax.lax.top_k — the standard
+hierarchical top-k, so the (N,) score vector never round-trips HBM twice.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _topk_dot_kernel(u_ref, items_ref, bias_ref, val_ref, idx_ref,
+                     *, bn: int, k: int):
+    j = pl.program_id(0)
+    u = u_ref[...].astype(jnp.float32)                   # (d,)
+    items = items_ref[...].astype(jnp.float32)           # (bN, d)
+    scores = jax.lax.dot_general(
+        items, u[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[:, 0]        # (bN,) MXU
+    scores = scores + bias_ref[...].astype(jnp.float32)
+    top_v, top_i = jax.lax.top_k(scores, k)
+    val_ref[...] = top_v
+    idx_ref[...] = (top_i + j * bn).astype(jnp.int32)
+
+
+def topk_dot_pallas(u: jax.Array, items: jax.Array, bias: jax.Array,
+                    k: int, block_n: int = 4096,
+                    interpret: bool = True):
+    """u: (d,), items: (N,d), bias: (N,) -> ((k,) values, (k,) indices)."""
+    n, d = items.shape
+    pn = (-n) % block_n
+    if pn:
+        items = jnp.pad(items, ((0, pn), (0, 0)))
+        bias = jnp.pad(bias, (0, pn), constant_values=NEG)
+    np_ = n + pn
+    n_blocks = np_ // block_n
+
+    vals, idxs = pl.pallas_call(
+        functools.partial(_topk_dot_kernel, bn=block_n, k=k),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((d,), lambda j: (0,)),
+            pl.BlockSpec((block_n, d), lambda j: (j, 0)),
+            pl.BlockSpec((block_n,), lambda j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k,), lambda j: (j,)),
+            pl.BlockSpec((k,), lambda j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks * k,), jnp.float32),
+            jax.ShapeDtypeStruct((n_blocks * k,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(u, items, bias)
+    # stage 2: global reduce over block partials
+    top_v, pos = jax.lax.top_k(vals, k)
+    return top_v, idxs[pos]

@@ -1,0 +1,657 @@
+"""Per-architecture bindings: (arch x shape) cell -> loweable step.
+
+For every assigned architecture and each of its input shapes this module
+produces a ``Cell``:
+  - ``step_fn``     : the jit-able function (train_step or serve_step),
+  - ``state_abs``   : abstract (ShapeDtypeStruct) state pytree,
+  - ``batch_abs``   : abstract input pytree,
+  - ``state_sh``    : NamedSharding pytree for the state,
+  - ``batch_sh``    : NamedSharding pytree for the inputs.
+
+Train cells include the full optimizer update (multi-optimizer for recsys:
+Adagrad tables / AdamW dense; AdamW for LM/GNN; Adafactor above the FSDP
+threshold so optimizer state stays within HBM at llama4 scale).
+Decode cells lower ``serve_step`` — one token against a sharded KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import arch_module, family, get_config, get_shapes
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig, ShapeSpec, \
+    SVQConfig
+from repro.core import retriever as svq_retriever
+from repro.models import lm as lm_lib
+from repro.models.gnn import mace as mace_lib
+from repro.models.lm import transformer as tfm
+from repro.models.recsys import bst as bst_lib
+from repro.models.recsys import din as din_lib
+from repro.models.recsys import dlrm as dlrm_lib
+from repro.models.recsys import embedding as emb_lib
+from repro.models.recsys import two_tower as tt_lib
+from repro.optim import adafactor, adamw, adagrad, clip_by_global_norm, \
+    multi_optimizer
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+I32 = jnp.int32
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    step_name: str
+    step_fn: Callable
+    state_abs: Any
+    batch_abs: Any
+    state_sh: Any
+    batch_sh: Any
+    donate_state: bool = True
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}/{self.shape.name}"
+
+
+def _ns(mesh: Mesh, spec_tree: Any, abs_tree: Any) -> Any:
+    """Spec pytree -> NamedSharding pytree (specs may be shallower)."""
+    flat_abs, treedef = jax.tree_util.tree_flatten(abs_tree)
+    flat_spec = treedef.flatten_up_to(spec_tree) \
+        if jax.tree_util.tree_structure(spec_tree) != treedef else \
+        jax.tree_util.tree_leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    if len(flat_spec) != len(flat_abs):
+        # spec tree matches abs tree structurally
+        flat_spec = [s for s in jax.tree_util.tree_leaves(
+            spec_tree, is_leaf=lambda x: isinstance(x, P))]
+    return jax.tree_util.tree_unflatten(
+        treedef, [NamedSharding(mesh, s) for s in flat_spec])
+
+
+def _spec_like(abs_tree: Any, spec: P) -> Any:
+    return jax.tree_util.tree_map(lambda _: spec, abs_tree)
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _all_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def _rep(abs_leaf) -> P:
+    return P(*([None] * len(abs_leaf.shape)))
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _div(mesh: Mesh, axes, dim: int):
+    """axes if dim divides evenly over them, else None (replicate)."""
+    return axes if axes and dim % _axes_size(mesh, axes) == 0 else None
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state sharding rules
+# ---------------------------------------------------------------------------
+
+def _adamw_state_spec(pspec_tree):
+    return {"m": pspec_tree, "v": pspec_tree}
+
+
+def _adafactor_state_spec(pspec_tree, abs_tree):
+    def one(spec, a):
+        if len(a.shape) >= 2:
+            return {"vr": P(*spec[:-1]), "vc": P(*spec[:-2], spec[-1])}
+        return {"v": spec}
+    return jax.tree_util.tree_map(one, pspec_tree, abs_tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def _multi_state_spec(pspec_tree, abs_tree, route):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abs_tree)
+    spec_flat = treedef.flatten_up_to(pspec_tree)
+    out = []
+    for (path, a), spec in zip(flat, spec_flat):
+        if route(path) == "adagrad":
+            out.append(spec)
+        else:
+            out.append({"m": spec, "v": spec})
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ===========================================================================
+# LM family
+# ===========================================================================
+
+def _lm_sharding(base_cfg: LMConfig, mesh: Mesh,
+                 cfg: Optional[LMConfig] = None) -> tfm.LMSharding:
+    """Threshold decisions from the BASE arch; knobs from the override."""
+    cfg = cfg or base_cfg
+    want = (cfg.force_fsdp == 1 if cfg.force_fsdp >= 0
+            else base_cfg.n_params() > tfm.FSDP_PARAM_THRESHOLD)
+    # FSDP spans every data-parallel axis (pod included on multi-pod:
+    # weight shards + optimizer transients halve again per pod)
+    fsdp = _batch_axes(mesh) if want else None
+    return tfm.LMSharding(batch_axes=_batch_axes(mesh), fsdp_axis=fsdp,
+                          seq_shard=cfg.seq_shard)
+
+
+def _lm_opt(cfg: LMConfig):
+    if cfg.n_params() > tfm.FSDP_PARAM_THRESHOLD:
+        return adafactor(1e-2), "adafactor"
+    return adamw(3e-4), "adamw"
+
+
+def _lm_cell(arch: str, shape: ShapeSpec, mesh: Mesh,
+             cfg_override: Optional[LMConfig] = None) -> Cell:
+    cfg: LMConfig = cfg_override or get_config(arch)
+    # sharding & optimizer thresholds ALWAYS follow the real arch (the
+    # roofline calibration overrides n_layers; it must not change them)
+    sh = _lm_sharding(get_config(arch), mesh, cfg)
+    if shape.kind == "decode" and sh.fsdp_axis is not None:
+        # serving: no optimizer state — FSDP only adds per-step weight
+        # gathers (measured 3x decode slowdown on yi-9b); llama4's
+        # experts stay model-sharded either way
+        import dataclasses as _dc
+        sh = _dc.replace(sh, fsdp_axis=None if get_config(arch).moe is
+                         None else sh.fsdp_axis)
+    pspecs = tfm.param_specs(cfg, sh)
+    params_abs = jax.eval_shape(
+        functools.partial(tfm.init_lm, cfg=cfg), jax.random.PRNGKey(0))
+    b = shape["global_batch"]
+    s = shape["seq_len"]
+    batch_p = P(sh.batch)
+
+    if shape.kind == "train":
+        opt, opt_kind = _lm_opt(get_config(arch))
+        state_abs = {
+            "params": params_abs,
+            "opt": jax.eval_shape(opt.init, params_abs),
+            "step": jax.ShapeDtypeStruct((), I32),
+        }
+        ospec = (_adafactor_state_spec(pspecs, params_abs)
+                 if opt_kind == "adafactor" else _adamw_state_spec(pspecs))
+        state_spec = {"params": pspecs, "opt": ospec, "step": P()}
+        batch_abs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), I32),
+            "labels": jax.ShapeDtypeStruct((b, s), I32),
+        }
+        batch_spec = {"tokens": P(sh.batch, None),
+                      "labels": P(sh.batch, None)}
+
+        n_mb = max(cfg.microbatch, 1)
+
+        def step(state, batch):
+            def loss_fn(p, mbatch):
+                return tfm.lm_loss(p, cfg, mbatch, sh)
+
+            if n_mb == 1:
+                (loss, aux), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state["params"], batch)
+            else:
+                # gradient accumulation: peak activation memory drops
+                # ~n_mb-fold; grads accumulate in f32
+                mbs = jax.tree_util.tree_map(
+                    lambda x: x.reshape((n_mb, x.shape[0] // n_mb)
+                                        + x.shape[1:]), batch)
+
+                def mb_step(acc, mbatch):
+                    (l, a), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(state["params"], mbatch)
+                    # bf16 accumulation: an f32 buffer alone is 2x the
+                    # param bytes per chip (12 GiB on llama4)
+                    acc = jax.tree_util.tree_map(
+                        lambda s, gg: s + gg.astype(s.dtype), acc, g)
+                    return acc, (l, a["ce"], a["moe_aux"])
+
+                zeros = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, p.dtype),
+                    state["params"])
+                gsum, (ls, ces, auxs) = jax.lax.scan(mb_step, zeros, mbs)
+                grads = jax.tree_util.tree_map(lambda s: s / n_mb, gsum)
+                loss = jnp.mean(ls)
+                aux = dict(ce=jnp.mean(ces), moe_aux=jnp.mean(auxs))
+            grads, gn = clip_by_global_norm(grads, 1.0)
+            params, opt_state = opt.update(grads, state["opt"],
+                                           state["params"], state["step"])
+            new_state = {"params": params, "opt": opt_state,
+                         "step": state["step"] + 1}
+            return new_state, dict(loss=loss, grad_norm=gn,
+                                   ce=aux["ce"], moe_aux=aux["moe_aux"])
+
+        return Cell(arch, shape, "train_step", step, state_abs, batch_abs,
+                    _ns(mesh, state_spec, state_abs),
+                    _ns(mesh, batch_spec, batch_abs))
+
+    if shape.kind == "prefill":
+        state_abs = {"params": params_abs}
+        state_spec = {"params": pspecs}
+        batch_abs = {"tokens": jax.ShapeDtypeStruct((b, s), I32)}
+        batch_spec = {"tokens": P(sh.batch, None)}
+        cache_seq_spec = sh.model_axis       # cache S over model
+
+        def step(state, batch):
+            logits, cache, _ = tfm.forward(state["params"], cfg,
+                                           batch["tokens"], sh, "prefill")
+            from repro.utils.sharding import shard as _shard
+            k = _shard(cache.k, P(None, sh.batch, cache_seq_spec, None,
+                                  None))
+            v = _shard(cache.v, P(None, sh.batch, cache_seq_spec, None,
+                                  None))
+            return dict(last_logits=logits[:, -1], cache_k=k, cache_v=v,
+                        pos=cache.pos)
+
+        return Cell(arch, shape, "serve_step", step, state_abs, batch_abs,
+                    _ns(mesh, state_spec, state_abs),
+                    _ns(mesh, batch_spec, batch_abs), donate_state=False)
+
+    # decode cells: one new token against a seq_len KV cache
+    hd = cfg.resolved_head_dim
+    cache_shape = (cfg.n_layers, b, s, cfg.n_kv_heads, hd)
+    if b == 1:
+        cache_spec = P(None, None, _all_axes(mesh), None, None)
+    else:
+        cache_spec = P(None, sh.batch, sh.model_axis, None, None)
+    state_abs = {"params": params_abs}
+    state_spec = {"params": pspecs}
+    tok_axes = _div(mesh, sh.batch, b)
+    batch_abs = {
+        "tokens": jax.ShapeDtypeStruct((b, 1), I32),
+        "cache_k": jax.ShapeDtypeStruct(cache_shape, BF16),
+        "cache_v": jax.ShapeDtypeStruct(cache_shape, BF16),
+        "pos": jax.ShapeDtypeStruct((), I32),
+    }
+    batch_spec = {"tokens": P(tok_axes, None), "cache_k": cache_spec,
+                  "cache_v": cache_spec, "pos": P()}
+
+    def step(state, batch):
+        cache = lm_lib.KVCache(k=batch["cache_k"], v=batch["cache_v"],
+                               pos=batch["pos"])
+        logits, new_cache = tfm.decode_step(state["params"], cfg,
+                                            batch["tokens"], cache, sh)
+        return dict(logits=logits[:, 0], cache_k=new_cache.k,
+                    cache_v=new_cache.v, pos=new_cache.pos)
+
+    return Cell(arch, shape, "serve_step", step, state_abs, batch_abs,
+                _ns(mesh, state_spec, state_abs),
+                _ns(mesh, batch_spec, batch_abs), donate_state=False)
+
+
+# ===========================================================================
+# GNN family (MACE)
+# ===========================================================================
+
+_GNN_DIMS = {
+    # shape name -> (d_feat, n_classes)
+    "full_graph_sm": (1433, 7),
+    "minibatch_lg": (602, 41),
+    "ogb_products": (100, 47),
+    "molecule": (16, 0),
+}
+
+
+def _gnn_sampled_sizes(shape: ShapeSpec) -> Tuple[int, int]:
+    """minibatch_lg: fixed sampled-subgraph sizes from the fanout spec."""
+    b = shape["batch_nodes"]
+    f1, f2 = shape["fanout1"], shape["fanout2"]
+    n = b + b * f1 + b * f1 * f2
+    e = b * f1 + b * f1 * f2
+    return n, e
+
+
+def _gnn_cell(arch: str, shape: ShapeSpec, mesh: Mesh,
+              cfg_override: Optional[GNNConfig] = None) -> Cell:
+    cfg: GNNConfig = cfg_override or get_config(arch)
+    d_feat, n_classes = _GNN_DIMS[shape.name]
+    sh = mace_lib.GNNSharding(batch_axes=_batch_axes(mesh))
+    pspecs = mace_lib.param_specs(cfg, sh)
+    params_abs = jax.eval_shape(
+        functools.partial(mace_lib.init_mace, cfg=cfg, d_feat=d_feat,
+                          n_classes=max(n_classes, 1)),
+        jax.random.PRNGKey(0))
+    opt = adamw(1e-3)
+    state_abs = {"params": params_abs,
+                 "opt": jax.eval_shape(opt.init, params_abs),
+                 "step": jax.ShapeDtypeStruct((), I32)}
+    state_spec = {"params": pspecs, "opt": _adamw_state_spec(pspecs),
+                  "step": P()}
+
+    if shape.kind == "minibatch":
+        n, e = _gnn_sampled_sizes(shape)
+    elif shape.kind == "batched_graphs":
+        n = shape["n_nodes"] * shape["batch"]
+        e = shape["n_edges"] * shape["batch"]
+    else:
+        n, e = shape["n_nodes"], shape["n_edges"]
+    avg_degree = max(e / max(n, 1), 1.0)
+    # pad node/edge counts to 256 so arrays shard over any mesh; padding
+    # is inert via edge_mask (zeroed messages) and labels = -1
+    n = -(-n // 256) * 256
+    e = -(-e // 256) * 256
+
+    bp = P(sh.batch)
+    batch_abs = {
+        "node_feat": jax.ShapeDtypeStruct((n, d_feat), F32),
+        "positions": jax.ShapeDtypeStruct((n, 3), F32),
+        "senders": jax.ShapeDtypeStruct((e,), I32),
+        "receivers": jax.ShapeDtypeStruct((e,), I32),
+        "edge_mask": jax.ShapeDtypeStruct((e,), F32),
+    }
+    batch_spec = {"node_feat": P(sh.batch, None),
+                  "positions": P(sh.batch, None),
+                  "senders": bp, "receivers": bp, "edge_mask": bp}
+    if shape.kind == "batched_graphs":
+        g = shape["batch"]
+        batch_abs["graph_ids"] = jax.ShapeDtypeStruct((n,), I32)
+        batch_abs["energies"] = jax.ShapeDtypeStruct((g,), F32)
+        batch_spec["graph_ids"] = bp
+        batch_spec["energies"] = P(None)
+        loss_fn_ = functools.partial(mace_lib.energy_loss, cfg=cfg, sh=sh,
+                                     avg_degree=avg_degree)
+    else:
+        batch_abs["labels"] = jax.ShapeDtypeStruct((n,), I32)
+        batch_spec["labels"] = bp
+        loss_fn_ = functools.partial(mace_lib.node_class_loss, cfg=cfg,
+                                     sh=sh, avg_degree=avg_degree)
+
+    def step(state, batch):
+        (loss, m), grads = jax.value_and_grad(
+            lambda p: loss_fn_(params=p, batch=batch), has_aux=True)(
+                state["params"])
+        grads, gn = clip_by_global_norm(grads, 10.0)
+        params, opt_state = opt.update(grads, state["opt"],
+                                       state["params"], state["step"])
+        return ({"params": params, "opt": opt_state,
+                 "step": state["step"] + 1},
+                dict(loss=loss, grad_norm=gn))
+
+    return Cell(arch, shape, "train_step", step, state_abs, batch_abs,
+                _ns(mesh, state_spec, state_abs),
+                _ns(mesh, batch_spec, batch_abs))
+
+
+# ===========================================================================
+# Recsys family
+# ===========================================================================
+
+_RECSYS_MODS = {"din": din_lib, "bst": bst_lib, "dlrm": dlrm_lib,
+                "two_tower": tt_lib}
+
+N_CATES = 65_536
+
+
+def _recsys_param_specs(cfg: RecsysConfig, params_abs) -> Any:
+    by_name = {t.name: t for t in cfg.tables}
+
+    def one(path, a):
+        keys = jax.tree_util.keystr(path)
+        if "tables" in keys:
+            name = path[-1].key if hasattr(path[-1], "key") else None
+            if name in by_name:
+                return emb_lib.table_partition_spec(by_name[name])
+        return P(*([None] * len(a.shape)))
+
+    return jax.tree_util.tree_map_with_path(one, params_abs)
+
+
+def _route_tables(path) -> str:
+    return "adagrad" if "tables" in jax.tree_util.keystr(path) else "adamw"
+
+
+def _recsys_batch(arch: str, cfg: RecsysConfig, shape: ShapeSpec,
+                  mesh: Mesh, train: bool):
+    """(abstract batch, spec batch) for din/bst/dlrm/two_tower cells."""
+    kind = cfg.kind
+    if shape.kind == "retrieval":
+        axes = _all_axes(mesh)
+        # pad the candidate list to 1024 (serving pads with repeats);
+        # 1024 divides both the 256- and 512-chip meshes
+        c = -(-shape["n_candidates"] // 1024) * 1024
+        if kind in ("din", "bst"):
+            s = cfg.seq_len
+            abs_ = {
+                "user_id": jax.ShapeDtypeStruct((1,), I32),
+                "context": jax.ShapeDtypeStruct((1,), I32),
+                "hist_items": jax.ShapeDtypeStruct((1, s), I32),
+                "hist_cates": jax.ShapeDtypeStruct((1, s), I32),
+                "cand_items": jax.ShapeDtypeStruct((c,), I32),
+                "cand_cates": jax.ShapeDtypeStruct((c,), I32),
+            }
+            sp = {k: _rep(v) for k, v in abs_.items()}
+            sp["cand_items"] = P(axes)
+            sp["cand_cates"] = P(axes)
+            return abs_, sp
+        if kind == "dlrm":
+            abs_ = {"dense": jax.ShapeDtypeStruct((1, cfg.n_dense), F32)}
+            sp = {"dense": P(None, None)}
+            for t in cfg.tables:
+                shp = (c, t.bag_size) if t.bag_size > 1 else (c,)
+                abs_[t.name] = jax.ShapeDtypeStruct(shp, I32)
+                sp[t.name] = P(axes, *([None] * (len(shp) - 1)))
+            return abs_, sp
+        # two_tower
+        abs_ = {
+            "user_id": jax.ShapeDtypeStruct((1,), I32),
+            "user_hist": jax.ShapeDtypeStruct(
+                (1, _tt_bag(cfg)), I32),
+            "cand_items": jax.ShapeDtypeStruct((c,), I32),
+            "cand_cates": jax.ShapeDtypeStruct((c,), I32),
+        }
+        sp = {k: _rep(v) for k, v in abs_.items()}
+        sp["cand_items"] = P(axes)
+        sp["cand_cates"] = P(axes)
+        return abs_, sp
+
+    b = shape["batch"]
+    axes = _batch_axes(mesh) if train else _all_axes(mesh)
+    bp = P(axes)
+    if kind in ("din", "bst"):
+        s = cfg.seq_len
+        abs_ = {
+            "user_id": jax.ShapeDtypeStruct((b,), I32),
+            "context": jax.ShapeDtypeStruct((b,), I32),
+            "hist_items": jax.ShapeDtypeStruct((b, s), I32),
+            "hist_cates": jax.ShapeDtypeStruct((b, s), I32),
+            "target_item": jax.ShapeDtypeStruct((b,), I32),
+            "target_cate": jax.ShapeDtypeStruct((b,), I32),
+        }
+    elif kind == "dlrm":
+        abs_ = {"dense": jax.ShapeDtypeStruct((b, cfg.n_dense), F32)}
+        for t in cfg.tables:
+            shp = (b, t.bag_size) if t.bag_size > 1 else (b,)
+            abs_[t.name] = jax.ShapeDtypeStruct(shp, I32)
+    else:
+        abs_ = {
+            "user_id": jax.ShapeDtypeStruct((b,), I32),
+            "user_hist": jax.ShapeDtypeStruct((b, _tt_bag(cfg)), I32),
+            "item_id": jax.ShapeDtypeStruct((b,), I32),
+            "item_cate": jax.ShapeDtypeStruct((b,), I32),
+        }
+    if train and kind != "two_tower":
+        abs_["label"] = jax.ShapeDtypeStruct((b,), F32)
+    sp = {k: P(axes, *([None] * (len(v.shape) - 1)))
+          for k, v in abs_.items()}
+    return abs_, sp
+
+
+def _tt_bag(cfg: RecsysConfig) -> int:
+    for t in cfg.tables:
+        if t.name == "user_hist":
+            return t.bag_size
+    return 50
+
+
+def _recsys_cell(arch: str, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    cfg: RecsysConfig = get_config(arch)
+    mod = _RECSYS_MODS[cfg.kind]
+    params_abs = jax.eval_shape(
+        functools.partial(mod.init, cfg=cfg), jax.random.PRNGKey(0))
+    pspecs = _recsys_param_specs(cfg, params_abs)
+    train = shape.kind == "train"
+    batch_abs, batch_spec = _recsys_batch(arch, cfg, shape, mesh, train)
+    bspec = P(_batch_axes(mesh)) if train else P(_all_axes(mesh))
+
+    if train:
+        opt = multi_optimizer(_route_tables,
+                              {"adagrad": adagrad(0.05),
+                               "adamw": adamw(1e-3)})
+        state_abs = {"params": params_abs,
+                     "opt": jax.eval_shape(opt.init, params_abs),
+                     "step": jax.ShapeDtypeStruct((), I32)}
+        state_spec = {"params": pspecs,
+                      "opt": _multi_state_spec(pspecs, params_abs,
+                                               _route_tables),
+                      "step": P()}
+
+        def step(state, batch):
+            (loss, m), grads = jax.value_and_grad(
+                lambda p: mod.loss(p, cfg, batch, bspec),
+                has_aux=True)(state["params"])
+            grads, gn = clip_by_global_norm(grads, 10.0)
+            params, opt_state = opt.update(grads, state["opt"],
+                                           state["params"], state["step"])
+            return ({"params": params, "opt": opt_state,
+                     "step": state["step"] + 1},
+                    dict(loss=loss, grad_norm=gn))
+
+        return Cell(arch, shape, "train_step", step, state_abs, batch_abs,
+                    _ns(mesh, state_spec, state_abs),
+                    _ns(mesh, batch_spec, batch_abs))
+
+    state_abs = {"params": params_abs}
+    state_spec = {"params": pspecs}
+    if shape.kind == "retrieval":
+        if cfg.kind == "two_tower":
+            def step(state, batch):
+                return mod.retrieval(state["params"], cfg, batch, bspec,
+                                     top_k=512)
+        else:
+            def step(state, batch):
+                return mod.retrieval(state["params"], cfg, batch, bspec)
+    else:
+        def step(state, batch):
+            return mod.serve(state["params"], cfg, batch, bspec)
+
+    return Cell(arch, shape, "serve_step", step, state_abs, batch_abs,
+                _ns(mesh, state_spec, state_abs),
+                _ns(mesh, batch_spec, batch_abs), donate_state=False)
+
+
+# ===========================================================================
+# Streaming-VQ retriever (the paper's own model, extra rows)
+# ===========================================================================
+
+def _svq_state_specs(cfg: SVQConfig, params_abs, index_abs):
+    pspec = _recsys_param_specs(
+        RecsysConfig(name="x", kind="x", embed_dim=cfg.embed_dim,
+                     tables=svq_retriever._table_specs(cfg)), params_abs)
+    index_spec = type(index_abs)(
+        vq=type(index_abs.vq)(w=P(None, None), c=P(None)),
+        store=type(index_abs.store)(
+            item_id=P("model"), cluster=P("model"),
+            item_emb=P("model", None), item_bias=P("model")),
+        freq=type(index_abs.freq)(last_seen=P("model"),
+                                  interval=P("model")),
+        step=P())
+    return pspec, index_spec
+
+
+def _svq_cell(shape: ShapeSpec, mesh: Mesh,
+              cfg_override: Optional[SVQConfig] = None) -> Cell:
+    cfg: SVQConfig = cfg_override or get_config("svq")
+    params_abs, index_abs = jax.eval_shape(
+        functools.partial(svq_retriever.init, cfg=cfg),
+        jax.random.PRNGKey(0))
+    pspec, index_spec = _svq_state_specs(cfg, params_abs, index_abs)
+    b = shape.get("batch", 512)
+    bp = P(_batch_axes(mesh))
+    batch_abs = {
+        "user_id": jax.ShapeDtypeStruct((b,), I32),
+        "hist": jax.ShapeDtypeStruct((b, cfg.user_hist_len), I32),
+        "item_id": jax.ShapeDtypeStruct((b,), I32),
+        "item_cate": jax.ShapeDtypeStruct((b,), I32),
+        "labels": jax.ShapeDtypeStruct((b, cfg.n_tasks), F32),
+        "cand_item_id": jax.ShapeDtypeStruct((b,), I32),
+        "cand_item_cate": jax.ShapeDtypeStruct((b,), I32),
+    }
+    batch_spec = {k: P(bp[0], *([None] * (len(v.shape) - 1)))
+                  for k, v in batch_abs.items()}
+    opt = multi_optimizer(_route_tables, {"adagrad": adagrad(0.05),
+                                          "adamw": adamw(1e-3)})
+    state_abs = {"params": params_abs, "index": index_abs,
+                 "opt": jax.eval_shape(opt.init, params_abs),
+                 "step": jax.ShapeDtypeStruct((), I32)}
+    state_spec = {"params": pspec, "index": index_spec,
+                  "opt": _multi_state_spec(pspec, params_abs,
+                                           _route_tables),
+                  "step": P()}
+
+    def step(state, batch):
+        cand = {"item_id": batch["cand_item_id"],
+                "item_cate": batch["cand_item_cate"]}
+        grads, new_index, metrics = svq_retriever.train_step(
+            state["params"], state["index"], cfg, batch, cand)
+        grads, gn = clip_by_global_norm(grads, 10.0)
+        params, opt_state = opt.update(grads, state["opt"],
+                                       state["params"], state["step"])
+        scalars = dict(loss=metrics["loss"], grad_norm=gn,
+                       used_clusters=metrics["used_clusters"],
+                       perplexity=metrics["perplexity"])
+        return ({"params": params, "index": new_index, "opt": opt_state,
+                 "step": state["step"] + 1}, scalars)
+
+    return Cell("svq", shape, "train_step", step, state_abs, batch_abs,
+                _ns(mesh, state_spec, state_abs),
+                _ns(mesh, batch_spec, batch_abs))
+
+
+# ===========================================================================
+# Entry point
+# ===========================================================================
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               cfg_override: Any = None) -> Cell:
+    shapes = {s.name: s for s in get_shapes(arch)}
+    if shape_name not in shapes:
+        raise KeyError(f"{arch} has no shape {shape_name!r}; "
+                       f"known: {sorted(shapes)}")
+    shape = shapes[shape_name]
+    fam = family(arch)
+    if arch == "svq":
+        if shape.kind != "train":
+            raise NotImplementedError(
+                "svq dry-run rows cover the train cell; serving is "
+                "exercised end-to-end in examples/ and benchmarks/")
+        return _svq_cell(shape, mesh, cfg_override)
+    if fam == "lm":
+        return _lm_cell(arch, shape, mesh, cfg_override)
+    if fam == "gnn":
+        return _gnn_cell(arch, shape, mesh, cfg_override)
+    return _recsys_cell(arch, shape, mesh)
+
+
+def all_cells(include_svq: bool = False):
+    """Yield (arch, shape_name) for the full 40-cell matrix."""
+    from repro.configs import ASSIGNED_ARCHS
+    for arch in ASSIGNED_ARCHS:
+        for s in get_shapes(arch):
+            yield arch, s.name
+    if include_svq:
+        yield "svq", "train_batch"

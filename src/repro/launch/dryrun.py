@@ -1,0 +1,197 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the placeholder device count before ANY other import — jax locks
+the device count on first initialization.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, family, get_config, get_shapes
+from repro.launch.bindings import all_cells, build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import Roofline, analyze, useful_flops
+
+
+def _compile_cell(cell, mesh):
+    donate = (0,) if cell.donate_state else ()
+    with mesh:
+        jitted = jax.jit(cell.step_fn,
+                         in_shardings=(cell.state_sh, cell.batch_sh),
+                         donate_argnums=donate)
+        return jitted.lower(cell.state_abs, cell.batch_abs).compile()
+
+
+def _calibrated_roofline(arch: str, shape_name: str, mesh,
+                         base_cfg=None) -> Roofline:
+    """Scan-corrected roofline terms via L in {1, 2} unrolled compiles.
+
+    XLA cost analysis counts a while-loop body ONCE regardless of trip
+    count, so a scanned L-layer model under-reports flops/bytes/
+    collectives by ~L.  The layer stack is homogeneous, so compiling the
+    same cell UNROLLED at 1 and 2 layers and extrapolating
+    term(L) = t1 + (L-1) * (t2 - t1) is exact modulo the (captured)
+    embed/head/optimizer base.
+    """
+    base_cfg = base_cfg or get_config(arch)
+    terms = []
+    for n_layers in (1, 2):
+        if family(arch) == "lm":
+            # microbatch=1: the grad-accumulation scan is ALSO a while
+            # loop the cost model counts once; per-step flops/bytes are
+            # microbatch-invariant (memory analysis uses the real cfg)
+            cfg_l = dataclasses.replace(base_cfg, n_layers=n_layers,
+                                        scan_layers=False, attn_unroll=0,
+                                        microbatch=1)
+        else:
+            cfg_l = dataclasses.replace(base_cfg, n_layers=n_layers,
+                                        scan_layers=False)
+        cell = build_cell(arch, shape_name, mesh, cfg_override=cfg_l)
+        comp = _compile_cell(cell, mesh)
+        terms.append(analyze(comp))
+    t1, t2 = terms
+    n = base_cfg.n_layers
+
+    def extrap(a, b):
+        # guard: per-layer deltas are non-negative for homogeneous
+        # stacks; a negative delta indicates cost-analysis noise (seen
+        # on very large fused modules) — fall back to linear-in-L scaling
+        if b >= a:
+            return a + (n - 1) * (b - a)
+        return b * n / 2.0
+
+    return Roofline(
+        flops=extrap(t1.flops, t2.flops),
+        hbm_bytes=extrap(t1.hbm_bytes, t2.hbm_bytes),
+        coll_bytes=int(extrap(t1.coll_bytes, t2.coll_bytes)),
+        coll_breakdown={
+            k: int(extrap(t1.coll_breakdown.get(k, 0),
+                          t2.coll_breakdown.get(k, 0)))
+            for k in set(t1.coll_breakdown) | set(t2.coll_breakdown)})
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, cfg_override=None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = dict(arch=arch, shape=shape_name,
+               mesh="x".join(map(str, mesh.devices.shape)),
+               n_chips=mesh.devices.size)
+    t0 = time.time()
+    try:
+        cell = build_cell(arch, shape_name, mesh,
+                          cfg_override=cfg_override)
+        rec["step"] = cell.step_name
+        donate = (0,) if cell.donate_state else ()
+        with mesh:
+            jitted = jax.jit(cell.step_fn,
+                             in_shardings=(cell.state_sh, cell.batch_sh),
+                             donate_argnums=donate)
+            lowered = jitted.lower(cell.state_abs, cell.batch_abs)
+            rec["t_lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["t_compile_s"] = round(time.time() - t1, 2)
+        mem = compiled.memory_analysis()
+        rec["memory"] = dict(
+            argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+            output_bytes=getattr(mem, "output_size_in_bytes", None),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+            alias_bytes=getattr(mem, "alias_size_in_bytes", None),
+            code_bytes=getattr(mem, "generated_code_size_in_bytes", None),
+        )
+        arg = rec["memory"]["argument_bytes"] or 0
+        alias = rec["memory"]["alias_bytes"] or 0
+        tmp = rec["memory"]["temp_bytes"] or 0
+        out = rec["memory"]["output_bytes"] or 0
+        # peak per-chip HBM: live args + temps + (non-aliased) outputs
+        rec["memory"]["per_chip_hbm_gib"] = round(
+            (arg + tmp + max(out - alias, 0)) / 2**30, 3)
+        roof_raw = analyze(compiled)
+        if arch != "svq" and family(arch) in ("lm", "gnn"):
+            roof = _calibrated_roofline(arch, shape_name, mesh,
+                                        base_cfg=cfg_override)
+            rec["roofline_raw"] = roof_raw.as_dict()
+        else:
+            roof = roof_raw
+        rec["roofline"] = roof.as_dict()
+        mf = useful_flops(arch, _shape_of(arch, shape_name),
+                          mesh.devices.size)
+        rec["roofline"]["model_flops"] = mf
+        if mf and roof.flops:
+            rec["roofline"]["useful_ratio"] = round(mf / roof.flops, 4)
+        from repro.launch.roofline import useful_bytes
+        mb = useful_bytes(arch, _shape_of(arch, shape_name),
+                          mesh.devices.size)
+        rec["roofline"]["floor_bytes"] = mb
+        if mb and roof.hbm_bytes:
+            rec["roofline"]["bytes_vs_floor"] = round(
+                roof.hbm_bytes / mb, 2)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug report
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["t_total_s"] = round(time.time() - t0, 2)
+    if verbose:
+        status = "OK " if rec["ok"] else "FAIL"
+        extra = ""
+        if rec["ok"]:
+            r = rec["roofline"]
+            extra = (f" dom={r['dominant']}"
+                     f" t=({r['t_compute']:.3e},{r['t_memory']:.3e},"
+                     f"{r['t_collective']:.3e})s"
+                     f" hbm={rec['memory']['per_chip_hbm_gib']}GiB")
+        else:
+            extra = " " + rec["error"][:200]
+        print(f"[dryrun {rec['mesh']}] {status} {arch}/{shape_name}"
+              f" ({rec['t_total_s']}s){extra}", flush=True)
+    return rec
+
+
+def _shape_of(arch, shape_name):
+    return {s.name: s for s in get_shapes(arch)}[shape_name]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--include-svq", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="append JSON-lines records here")
+    args = ap.parse_args()
+
+    if args.arch and args.shape:
+        cells = [(args.arch, args.shape)]
+    elif args.arch:
+        cells = [(args.arch, s.name) for s in get_shapes(args.arch)]
+    else:
+        cells = list(all_cells(include_svq=args.include_svq))
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_fail = 0
+    for multi in meshes:
+        for arch, shape in cells:
+            rec = run_cell(arch, shape, multi)
+            n_fail += 0 if rec["ok"] else 1
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    print(f"[dryrun] done, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the ``pod``
+axis carries only data-parallel traffic (gradient/EMA all-reduce), so
+scaling out = adding pods; see DESIGN.md §5.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (smoke tests run on 1 CPU device; only
+launch/dryrun.py forces 512 host devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_debug_mesh(n_devices: int | None = None):
+    """Tiny mesh over whatever devices exist (tests)."""
+    n = n_devices or len(jax.devices())
+    if n >= 4:
+        return jax.make_mesh((n // 2, 2), ("data", "model"),
+                             axis_types=_auto(2))
+    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))
+
+
+def mesh_axes(mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def batch_axes_of(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

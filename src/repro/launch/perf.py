@@ -1,0 +1,72 @@
+"""§Perf hillclimb runner: compile one cell, record labeled roofline.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch granite-moe-1b-a400m \
+        --shape train_4k --label moe_alltoall_constraint
+
+Appends {label, arch, shape, roofline, memory} to results/perf_log.jsonl
+so successive hypothesis->change->measure iterations are durably logged
+(EXPERIMENTS.md §Perf is generated from this file).
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+
+from repro.launch.dryrun import run_cell
+
+
+def _parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return k, v == "True"
+    return k, v
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--label", required=True)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--out", default="results/perf_log.jsonl")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config overrides, e.g. --set remat=full")
+    args = ap.parse_args()
+
+    cfg_override = None
+    if args.set:
+        from repro.configs import get_config
+        cfg_override = dataclasses.replace(
+            get_config(args.arch),
+            **dict(_parse_override(kv) for kv in args.set))
+
+    rec = run_cell(args.arch, args.shape, multi_pod=args.mesh == "multi",
+                   cfg_override=cfg_override)
+    rec["overrides"] = args.set
+    rec["label"] = args.label
+    rec.pop("traceback", None)
+    with open(args.out, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    if rec["ok"]:
+        r = rec["roofline"]
+        print(f"[perf:{args.label}] t_compute={r['t_compute']:.4f} "
+              f"t_memory={r['t_memory']:.4f} "
+              f"t_collective={r['t_collective']:.4f} "
+              f"dominant={r['dominant']} "
+              f"hbm={rec['memory']['per_chip_hbm_gib']}GiB "
+              f"useful={r.get('useful_ratio')}")
+    else:
+        print(f"[perf:{args.label}] FAILED: {rec['error'][:300]}")
+
+
+if __name__ == "__main__":
+    main()

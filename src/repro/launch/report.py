@@ -1,0 +1,156 @@
+"""Render dry-run JSONL records into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.report results/dryrun_full.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import OrderedDict
+
+
+def _f(x, nd=3):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    if abs(x) < 1e-3 or abs(x) >= 1e4:
+        return f"{x:.2e}"
+    return f"{x:.{nd}f}"
+
+
+def load(path: str):
+    recs = OrderedDict()
+    for line in open(path):
+        r = json.loads(line)
+        recs[(r["arch"], r["shape"], r["mesh"])] = r   # last write wins
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    out = ["| arch | shape | mesh | step | ok | compile_s | HBM/chip GiB "
+           "| collectives (GiB/chip/step) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in recs.items():
+        if r["ok"]:
+            cb = r["roofline"]["coll_breakdown"]
+            coll = " ".join(f"{k.split('-')[-1][:6]}={v / 2**30:.2f}"
+                            for k, v in sorted(cb.items()) if v)
+            out.append(
+                f"| {a} | {s} | {m} | {r['step']} | yes "
+                f"| {r.get('t_compile_s', '-')} "
+                f"| {r['memory']['per_chip_hbm_gib']} | {coll or '-'} |")
+        else:
+            out.append(f"| {a} | {s} | {m} | - | **FAIL** | - | - "
+                       f"| {r['error'][:60]} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs, mesh: str = "16x16") -> str:
+    out = ["| arch | shape | t_compute s | t_memory s | t_collective s "
+           "| dominant | model/HLO flops | bound step s |",
+           "|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in recs.items():
+        if m != mesh or not r["ok"]:
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {a} | {s} | {_f(rf['t_compute'])} | {_f(rf['t_memory'])} "
+            f"| {_f(rf['t_collective'])} | {rf['dominant']} "
+            f"| {_f(rf.get('useful_ratio'))} | {_f(rf['t_bound'])} |")
+    return "\n".join(out)
+
+
+def summarize(recs) -> str:
+    n_ok = sum(1 for r in recs.values() if r["ok"])
+    n = len(recs)
+    worst = sorted(
+        ((r["roofline"]["useful_ratio"], k) for k, r in recs.items()
+         if r["ok"] and r["roofline"].get("useful_ratio")
+         and k[2] == "16x16"),
+        key=lambda t: t[0])
+    coll_bound = [(r["roofline"]["t_collective"], k)
+                  for k, r in recs.items()
+                  if r["ok"] and r["roofline"]["dominant"] == "collective"
+                  and k[2] == "16x16"]
+    lines = [f"{n_ok}/{n} cells compile OK"]
+    if worst:
+        lines.append("worst useful-flops ratios: "
+                     + ", ".join(f"{k[0]}/{k[1]}={v:.3f}"
+                                 for v, k in worst[:3]))
+    if coll_bound:
+        coll_bound.sort(reverse=True)
+        lines.append("most collective-bound: "
+                     + ", ".join(f"{k[0]}/{k[1]}={v:.3f}s"
+                                 for v, k in coll_bound[:3]))
+    return "\n".join(lines)
+
+
+def baseline_vs_final(base_path: str, final_path: str,
+                      mesh: str = "16x16") -> str:
+    """Cells whose bound step time moved >10% between the two sweeps."""
+    base = load(base_path)
+    fin = load(final_path)
+    out = ["| arch | shape | bound s (paper-faithful baseline) "
+           "| bound s (optimized) | speedup | HBM GiB before -> after |",
+           "|---|---|---|---|---|---|"]
+    for (a, s, m), r in fin.items():
+        if m != mesh or not r["ok"]:
+            continue
+        b = base.get((a, s, m))
+        if not b or not b["ok"]:
+            continue
+        tb = b["roofline"]["t_bound"]
+        tf = r["roofline"]["t_bound"]
+        if tb <= 0 or abs(tf - tb) / tb < 0.10:
+            continue
+        out.append(
+            f"| {a} | {s} | {_f(tb)} | {_f(tf)} | {tb / tf:.2f}x "
+            f"| {b['memory']['per_chip_hbm_gib']} -> "
+            f"{r['memory']['per_chip_hbm_gib']} |")
+    return "\n".join(out)
+
+
+def write_into_experiments(final_path: str, md_path: str,
+                           base_path: str | None = None) -> None:
+    recs = load(final_path)
+    dr = dryrun_table(recs)
+    rf = (roofline_table(recs, "16x16")
+          + "\n\nMulti-pod (2x16x16):\n\n"
+          + roofline_table(recs, "2x16x16")
+          + "\n\n" + summarize(recs))
+    md = open(md_path).read()
+    md = md.replace("<!-- DRYRUN_TABLE -->", dr)
+    md = md.replace("<!-- ROOFLINE_TABLE -->", rf)
+    if base_path:
+        md = md.replace("<!-- BASELINE_VS_FINAL -->",
+                        baseline_vs_final(base_path, final_path))
+    open(md_path, "w").write(md)
+    print(f"wrote tables into {md_path}")
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", nargs="?", default="results/dryrun_full.jsonl")
+    ap.add_argument("--write-into", default=None,
+                    help="replace placeholders in this markdown file")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline jsonl for the before/after table")
+    args = ap.parse_args()
+    if args.write_into:
+        write_into_experiments(args.path, args.write_into, args.baseline)
+        return
+    recs = load(args.path)
+    print("## Dry-run\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single pod 16x16)\n")
+    print(roofline_table(recs, "16x16"))
+    print("\n## Roofline (multi-pod 2x16x16)\n")
+    print(roofline_table(recs, "2x16x16"))
+    print("\n## Summary\n")
+    print(summarize(recs))
+
+
+if __name__ == "__main__":
+    main()

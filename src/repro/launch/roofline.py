@@ -1,0 +1,209 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (per training/serving
+step, per chip — the compiled module after GSPMD partitioning IS the
+per-chip program, so its FLOPs/bytes/collective shapes are already
+per-chip):
+
+  compute    = HLO_FLOPs / peak_FLOPs_per_chip
+  memory     = HLO_bytes_accessed / HBM_bw
+  collective = sum(collective operand bytes) / ICI_link_bw
+
+Hardware: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (one link assumed; conservative).
+
+collective bytes are NOT in cost_analysis: we parse the optimized HLO and
+sum the OUTPUT shape bytes of every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute (async '-start' forms
+counted once, '-done' skipped).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+_COLL_SKIP = re.compile(r"\b(all-reduce|all-gather|reduce-scatter|"
+                        r"all-to-all|collective-permute)-done\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind OUTPUT bytes summed over the module."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m or _COLL_SKIP.search(line):
+            continue
+        kind = m.group(1)
+        eq = line.index("=")
+        lhs = line[eq + 1:m.start()]          # shapes between '=' and op
+        b = sum(_shape_bytes(d, dims)
+                for d, dims in _SHAPE_RE.findall(lhs))
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: int
+    coll_breakdown: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Lower-bound step time: max of the three overlappable terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> Dict:
+        return dict(flops=self.flops, hbm_bytes=self.hbm_bytes,
+                    coll_bytes=self.coll_bytes,
+                    coll_breakdown=self.coll_breakdown,
+                    t_compute=self.t_compute, t_memory=self.t_memory,
+                    t_collective=self.t_collective,
+                    dominant=self.dominant, t_bound=self.t_bound)
+
+
+def analyze(compiled, hlo_text: Optional[str] = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):           # older API returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    cb = collective_bytes(text)
+    return Roofline(flops=flops, hbm_bytes=hbm,
+                    coll_bytes=sum(cb.values()), coll_breakdown=cb)
+
+
+# ---------------------------------------------------------------------------
+# Analytic HBM floor (per chip): params traffic + once-streamed activations
+# ---------------------------------------------------------------------------
+
+def useful_bytes(arch: str, shape, n_chips: int):
+    """Lower-bound HBM bytes/chip/step for a perfectly-fused program.
+
+    Train: params read twice (fwd+bwd) + grad write + f32 optimizer RMW,
+    plus ~12 residual-width activation streams per layer (bf16).
+    The HLO t_memory above this floor quantifies fusion/remat waste —
+    on this CPU-lowered dry-run the gap also absorbs CPU-vs-TPU fusion
+    differences (documented in EXPERIMENTS.md).
+    """
+    from repro.configs import family, get_config
+    if arch == "svq":
+        return None
+    fam = family(arch)
+    cfg = get_config(arch)
+    if fam == "lm":
+        n = cfg.n_params()
+        p_bytes = n * 2 / n_chips
+        model_axis = 16                 # production meshes are (..., 16)
+        dp = n_chips // model_axis      # activations stream per DP shard
+        if shape.kind == "train":
+            toks = shape["global_batch"] * shape["seq_len"] / dp
+            act = cfg.n_layers * toks * cfg.d_model * 2 * 12 * 3
+            opt = n * 4 * 4 / n_chips
+            return 3 * p_bytes + opt + act
+        if shape.kind == "prefill":
+            toks = shape["global_batch"] * shape["seq_len"] / dp
+            act = cfg.n_layers * toks * cfg.d_model * 2 * 12
+            return p_bytes + act
+        # decode: weights + full KV cache read once
+        kv = (2 * cfg.n_layers * shape["global_batch"] * shape["seq_len"]
+              * cfg.n_kv_heads * cfg.resolved_head_dim * 2) / n_chips
+        return p_bytes + kv
+    return None
+
+
+# ---------------------------------------------------------------------------
+# "Useful" model FLOPs (per chip): catches remat/redundancy waste
+# ---------------------------------------------------------------------------
+
+def useful_flops(arch: str, shape, n_chips: int) -> Optional[float]:
+    """MODEL_FLOPS / chip: 6*N*D for LM train (N params, D tokens),
+    2*N*D for LM forward-only; family-appropriate analogs elsewhere."""
+    from repro.configs import family, get_config
+    if arch == "svq":
+        return None
+    fam = family(arch)
+    cfg = get_config(arch)
+    if fam == "lm":
+        n = cfg.n_active_params() if cfg.moe else cfg.n_params()
+        if shape.kind == "train":
+            toks = shape["global_batch"] * shape["seq_len"]
+            return 6.0 * n * toks / n_chips
+        if shape.kind == "prefill":
+            toks = shape["global_batch"] * shape["seq_len"]
+            return 2.0 * n * toks / n_chips
+        # decode: one token per sequence + KV-cache attention reads
+        toks = shape["global_batch"]
+        attn = (2.0 * toks * shape["seq_len"] * cfg.n_layers
+                * cfg.n_heads * cfg.resolved_head_dim * 2)
+        return (2.0 * n * toks + attn) / n_chips
+    if fam == "recsys":
+        dense = cfg.n_params() - sum(t.vocab * t.dim for t in cfg.tables)
+        if shape.kind == "retrieval":
+            b = shape["n_candidates"]
+        else:
+            b = shape["batch"]
+        mult = 6.0 if shape.kind == "train" else 2.0
+        return mult * dense * b / n_chips
+    if fam == "gnn":
+        # per-edge Gaunt TP + per-node products dominate
+        if shape.kind == "minibatch":
+            from repro.launch.bindings import _gnn_sampled_sizes
+            n_nodes, n_edges = _gnn_sampled_sizes(shape)
+        elif shape.kind == "batched_graphs":
+            n_nodes = shape["n_nodes"] * shape["batch"]
+            n_edges = shape["n_edges"] * shape["batch"]
+        else:
+            n_nodes, n_edges = shape["n_nodes"], shape["n_edges"]
+        c = cfg.d_hidden
+        per_edge = 2.0 * c * 9 * 9 * 9
+        per_node = 2.0 * 2 * c * 9 * 9 * 9 + 2.0 * 3 * (3 * c) * c * 9
+        fwd = cfg.n_layers * (n_edges * per_edge + n_nodes * per_node)
+        return 3.0 * fwd / n_chips      # train: fwd + bwd ~ 3x fwd
+    return None

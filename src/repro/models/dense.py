@@ -1,0 +1,70 @@
+"""Plain dense building blocks (pure-pytree, functional)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def init_linear(key: jax.Array, d_in: int, d_out: int,
+                dtype=jnp.float32, scale: float | None = None) -> Params:
+    if scale is None:
+        scale = d_in ** -0.5
+    return {
+        "w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
+              * scale).astype(dtype),
+        "b": jnp.zeros((d_out,), dtype),
+    }
+
+
+def linear(p: Params, x: jax.Array) -> jax.Array:
+    return x @ p["w"] + p["b"]
+
+
+def init_mlp(key: jax.Array, d_in: int, hidden: Sequence[int],
+             dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, len(hidden))
+    layers = []
+    d = d_in
+    for k, h in zip(keys, hidden):
+        layers.append(init_linear(k, d, h, dtype))
+        d = h
+    return {"layers": layers}
+
+
+def mlp(p: Params, x: jax.Array, act=jax.nn.relu,
+        final_act: bool = False) -> jax.Array:
+    n = len(p["layers"])
+    for i, lp in enumerate(p["layers"]):
+        x = linear(lp, x)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Params:
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(ms + eps)).astype(x.dtype)) * p["g"]
+
+
+def count_params(tree: Any) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "size"))

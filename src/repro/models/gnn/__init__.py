@@ -1,0 +1,4 @@
+from repro.models.gnn.mace import (
+    GNNSharding, NO_SHARD, bessel_rbf, energy_loss, gaunt_coefficients,
+    gaunt_tp, init_mace, mace_forward, node_class_loss, param_specs,
+    real_sph_l2)

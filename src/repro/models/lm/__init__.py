@@ -1,0 +1,4 @@
+from repro.models.lm.attention import KVCache, init_cache
+from repro.models.lm.transformer import (
+    LMSharding, NO_SHARD, default_sharding, decode_step, forward,
+    greedy_generate, init_lm, lm_loss, param_specs, prefill)

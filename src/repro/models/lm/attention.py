@@ -1,0 +1,213 @@
+"""Attention for the LM family: RoPE, GQA, qk-norm, flash-scan, decode.
+
+Three execution shapes:
+  - ``full``      : materialize (B,H,S,S) scores — short sequences only.
+  - ``flash_scan``: lax.scan over KV blocks with online softmax (the
+                    flash-attention recurrence in pure JAX) — this is what
+                    long-sequence train/prefill lowers to in the dry-run.
+                    The Pallas TPU kernel (kernels/flash_attention.py) is
+                    the hardware-optimized version of the same recurrence.
+  - ``decode``    : q_len == 1 against a (possibly huge, sharded) KV cache.
+
+GQA is handled by broadcasting KV heads to query heads inside the block
+computation; sharding of the head axis stays on the ``model`` mesh axis.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies (head_dim/2,) float32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rmsnorm_headwise(x: jax.Array, g: jax.Array,
+                     eps: float = 1e-6) -> jax.Array:
+    """Per-head RMSNorm used by qk_norm archs (qwen3). x: (..., hd)."""
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(ms + eps)) * g).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA broadcast
+# ---------------------------------------------------------------------------
+
+def repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, Hk, hd) -> (B, S, Hk*n_rep, hd) without copying semantics."""
+    if n_rep == 1:
+        return x
+    b, s, hk, hd = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, hk, n_rep, hd))
+    return x.reshape(b, s, hk * n_rep, hd)
+
+
+# ---------------------------------------------------------------------------
+# Full (materialized) causal attention — short sequences / reference
+# ---------------------------------------------------------------------------
+
+def attention_full(q: jax.Array, k: jax.Array, v: jax.Array,
+                   causal: bool = True) -> jax.Array:
+    """q: (B,S,H,hd), k/v: (B,T,Hk,hd); GQA-broadcast inside. -> like q."""
+    b, s, h, hd = q.shape
+    k = repeat_kv(k, h // k.shape[2])
+    v = repeat_kv(v, h // v.shape[2])
+    t = k.shape[1]
+    scale = hd ** -0.5
+    logits = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = jnp.arange(s)[:, None] + (t - s)
+        kpos = jnp.arange(t)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bthd->bshd", w, v)
+
+
+# ---------------------------------------------------------------------------
+# Flash-scan: online-softmax over KV blocks (pure JAX, shardable)
+# ---------------------------------------------------------------------------
+
+def attention_flash_scan(q: jax.Array, k: jax.Array, v: jax.Array,
+                         block_kv: int = 512,
+                         causal: bool = True,
+                         unroll: int = 1) -> jax.Array:
+    """Blockwise causal attention with the flash recurrence.
+
+    q: (B,S,H,hd); k/v: (B,T,Hk,hd) — the GQA broadcast happens PER
+    BLOCK inside the scan, so the H-repeated KV never materializes
+    globally (peak extra memory: (B,block_kv,H,hd) + (B,H,S,block_kv)).
+    """
+    b, s, h, hd = q.shape
+    hk = k.shape[2]
+    n_rep = h // hk
+    t = k.shape[1]
+    if t % block_kv != 0:
+        # fall back: pad kv to a block multiple with masked tail
+        pad = block_kv - t % block_kv
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        t_pad = t + pad
+    else:
+        t_pad = t
+    n_blocks = t_pad // block_kv
+    scale = hd ** -0.5
+    q32 = q.astype(jnp.float32) * scale
+    qpos = jnp.arange(s) + (t - s)                       # absolute q position
+
+    kb = k.reshape(b, n_blocks, block_kv, hk, hd)
+    vb = v.reshape(b, n_blocks, block_kv, hk, hd)
+
+    def step(carry, xs):
+        acc, m, l = carry                                # (B,S,H,hd),(B,H,S),(B,H,S)
+        k_blk, v_blk, blk_idx = xs
+        k_blk = repeat_kv(k_blk, n_rep)                  # (B,block,H,hd)
+        v_blk = repeat_kv(v_blk, n_rep)
+        kpos = blk_idx * block_kv + jnp.arange(block_kv)
+        logits = jnp.einsum("bshd,bthd->bhst", q32,
+                            k_blk.astype(jnp.float32))    # (B,H,S,block)
+        mask = kpos[None, :] < t
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        m_blk = jnp.max(logits, axis=-1)                  # (B,H,S)
+        m_new = jnp.maximum(m, m_blk)
+        # renormalize previous accumulator
+        alpha = jnp.exp(m - m_new)                        # (B,H,S)
+        p = jnp.exp(logits - m_new[..., None])            # (B,H,S,block)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha.transpose(0, 2, 1)[..., None] \
+            + jnp.einsum("bhst,bthd->bshd", p,
+                         v_blk.astype(jnp.float32))
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, s, h, hd), jnp.float32)
+    m0 = jnp.full((b, h, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0),
+        (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
+         jnp.arange(n_blocks)),
+        unroll=(n_blocks if unroll == 0 else unroll))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode: one query token against a fixed-capacity cache
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (L, B, S_max, Hk, hd)
+    v: jax.Array        # (L, B, S_max, Hk, hd)
+    pos: jax.Array      # () int32 — current fill length (uniform over batch)
+
+    @property
+    def s_max(self) -> int:
+        return self.k.shape[2]
+
+
+def init_cache(cfg, batch: int, s_max: int, dtype=jnp.bfloat16) -> KVCache:
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, s_max, cfg.n_kv_heads, hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   pos=jnp.zeros((), jnp.int32))
+
+
+def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     k_new: jax.Array, v_new: jax.Array,
+                     pos: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against a cache layer.
+
+    q: (B,1,H,hd); k_cache/v_cache: (B,S_max,Hk,hd); k_new/v_new: (B,1,Hk,hd).
+    Returns (out (B,1,H,hd), k_cache', v_cache').
+
+    The score reduction runs over the (possibly sharded) S_max axis; masking
+    by ``pos`` keeps unwritten slots inert, so the cache array can be
+    sequence-sharded over the mesh and GSPMD reduces with an all-reduce.
+    """
+    b, _, h, hd = q.shape
+    s_max = k_cache.shape[1]
+    hk = k_cache.shape[2]
+    n_rep = h // hk
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
+    scale = hd ** -0.5
+    q32 = q.astype(jnp.float32) * scale
+    qh = q32.reshape(b, 1, hk, n_rep, hd)
+    logits = jnp.einsum("bqkrd,btkd->bkrqt", qh,
+                        k_cache.astype(jnp.float32))      # (B,Hk,rep,1,S)
+    valid = jnp.arange(s_max)[None, None, None, None, :] <= pos
+    logits = jnp.where(valid, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrqt,btkd->bqkrd", w,
+                     v_cache.astype(jnp.float32))
+    return (out.reshape(b, 1, h, hd).astype(q.dtype), k_cache, v_cache)

@@ -1,0 +1,450 @@
+"""LM-family transformer: GQA + RoPE + qk-norm + (optional) MoE.
+
+Covers all five assigned LM archs (smollm-360m, yi-9b, qwen3-0.6b,
+granite-moe-1b-a400m, llama4-maverick-400b-a17b) from one definition:
+
+  - params are stacked over layers and applied with ``lax.scan`` +
+    ``jax.checkpoint`` (selectable remat policy) — compile time and HBM
+    stay bounded at 48 layers;
+  - training/prefill attention uses the pure-JAX flash-scan recurrence
+    (no (S,S) score materialization), decode attends one token against a
+    fixed-capacity KV cache that may be sequence-sharded across the mesh;
+  - sharding follows Megatron TP + sequence-parallel residuals: weights
+    shard over ``model`` (heads / d_ff / experts / vocab), activations
+    shard batch over (pod, data) and the residual stream's sequence axis
+    over ``model`` between layers; huge archs additionally shard weight
+    rows over ``data`` (FSDP) — see ``param_specs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LMConfig
+from repro.models.lm import attention as attn
+from repro.models.lm import moe as moe_lib
+from repro.models.lm.attention import KVCache
+from repro.utils.sharding import shard
+
+Params = Dict[str, Any]
+
+# FSDP kicks in for archs whose parameters exceed this (bf16 bytes ~ 2N).
+FSDP_PARAM_THRESHOLD = 20_000_000_000
+
+
+@dataclass(frozen=True)
+class LMSharding:
+    """Mesh-axis names used by activation constraints & param specs."""
+    batch_axes: Tuple[str, ...] = ("pod", "data")
+    model_axis: str = "model"
+    fsdp_axis: Optional[str] = None      # "data" for > FSDP_PARAM_THRESHOLD
+    seq_shard: bool = True               # sequence-parallel residual stream
+
+    @property
+    def batch(self):
+        return self.batch_axes if self.batch_axes else None
+
+
+def default_sharding(cfg: LMConfig, multi_pod: bool = True) -> LMSharding:
+    fsdp = "data" if cfg.n_params() > FSDP_PARAM_THRESHOLD else None
+    axes = ("pod", "data") if multi_pod else ("data",)
+    return LMSharding(batch_axes=axes, fsdp_axis=fsdp)
+
+
+NO_SHARD = LMSharding(batch_axes=(), model_axis="", fsdp_axis=None,
+                      seq_shard=False)
+
+
+def _dt(cfg: LMConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key: jax.Array, cfg: LMConfig) -> Params:
+    hd = cfg.resolved_head_dim
+    d, h, hk, f = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 8)
+
+    def w(key, shape, fan_in):
+        return (jax.random.normal(key, shape, jnp.float32)
+                * fan_in ** -0.5).astype(dt)
+
+    p: Params = {
+        "attn_norm": jnp.ones((d,), dt),
+        "wq": w(ks[0], (d, h * hd), d),
+        "wk": w(ks[1], (d, hk * hd), d),
+        "wv": w(ks[2], (d, hk * hd), d),
+        "wo": w(ks[3], (h * hd, d), h * hd),
+        "ffn_norm": jnp.ones((d,), dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    if cfg.moe is None:
+        p["w1"] = w(ks[4], (d, f), d)
+        p["w3"] = w(ks[5], (d, f), d)
+        p["w2"] = w(ks[6], (f, d), f)
+    else:
+        e = cfg.moe.n_experts
+        p["router"] = w(ks[7], (d, e), d)
+        p["w1"] = w(ks[4], (e, d, f), d)
+        p["w3"] = w(ks[5], (e, d, f), d)
+        p["w2"] = w(ks[6], (e, f, d), f)
+    return p
+
+
+def init_lm(key: jax.Array, cfg: LMConfig) -> Params:
+    ke, kl, kh = jax.random.split(key, 3)
+    dt = _dt(cfg)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    vp = cfg.padded_vocab          # pad so the vocab axis shards evenly
+    return {
+        "embed": (jax.random.normal(ke, (vp, cfg.d_model), jnp.float32)
+                  * cfg.d_model ** -0.5).astype(dt),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": (jax.random.normal(kh, (cfg.d_model, vp), jnp.float32)
+                    * cfg.d_model ** -0.5).astype(dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Param / activation sharding specs
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: LMConfig, sh: LMSharding) -> Params:
+    """PartitionSpec pytree matching init_lm's structure.
+
+    FSDP (row-sharding over ``data``) applies ONLY to MoE expert weights:
+    they carry ~99% of the >20B-param archs, their data-axis gather is
+    explicit inside the shard_map MoE, and fsdp-sharding the attention
+    weights makes GSPMD all-reduce ACTIVATIONS over data instead (~25x
+    the traffic of a weight gather — measured on llama4 train_4k).
+    """
+    m, fs = sh.model_axis or None, sh.fsdp_axis
+    layer: Params = {
+        "attn_norm": P(None, None),
+        "wq": P(None, fs, m),
+        # K/V projections replicated over model: n_kv_heads < mesh model
+        # size for every assigned arch, and replicated KV avoids the
+        # S<->head resharding pathology (see _attention_block)
+        "wk": P(None, fs, None),
+        "wv": P(None, fs, None),
+        "wo": P(None, m, fs),
+        "ffn_norm": P(None, None),
+    }
+    if cfg.qk_norm:
+        layer["q_norm"] = P(None, None)
+        layer["k_norm"] = P(None, None)
+    if cfg.moe is None:
+        layer["w1"] = P(None, fs, m)
+        layer["w3"] = P(None, fs, m)
+        layer["w2"] = P(None, m, fs)
+    else:
+        layer["router"] = P(None, None, None)
+        layer["w1"] = P(None, m, fs, None)
+        layer["w3"] = P(None, m, fs, None)
+        layer["w2"] = P(None, m, None, fs)
+    return {
+        "embed": P(m, fs),
+        "layers": layer,
+        "final_norm": P(None),
+        "lm_head": P(fs, m),
+    }
+
+
+def _h_spec(sh: LMSharding, seq_sharded: bool) -> P:
+    if not sh.batch_axes and not sh.model_axis:
+        return P()
+    return P(sh.batch, sh.model_axis if (seq_sharded and sh.seq_shard
+                                         and sh.model_axis) else None, None)
+
+
+def _heads_spec(sh: LMSharding) -> P:
+    if not sh.batch_axes and not sh.model_axis:
+        return P()
+    return P(sh.batch, None, sh.model_axis or None, None)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _rmsnorm(x: jax.Array, g: jax.Array, eps: float) -> jax.Array:
+    # f32 is confined to the (B,S,1) statistics: the full activation (and
+    # its cotangent, and every downstream collective) stays bf16 — the
+    # x32-everywhere version doubled activation all-gather/all-reduce
+    # bytes in the bwd graph (measured on llama4/yi train_4k)
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                  keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+    return x * inv * g
+
+
+def _attention_block(p: Params, cfg: LMConfig, h: jax.Array,
+                     positions: jax.Array, sh: LMSharding,
+                     kv_layer: Optional[Tuple[jax.Array, jax.Array]],
+                     cache_pos: Optional[jax.Array],
+                     block_kv: int):
+    """Returns (attn_out, (k_for_cache, v_for_cache) or updated cache)."""
+    b, s, d = h.shape
+    hd = cfg.resolved_head_dim
+    nh, nk = cfg.n_heads, cfg.n_kv_heads
+    x = _rmsnorm(h, p["attn_norm"], cfg.norm_eps)
+    q = (x @ p["wq"]).reshape(b, s, nh, hd)
+    k = (x @ p["wk"]).reshape(b, s, nk, hd)
+    v = (x @ p["wv"]).reshape(b, s, nk, hd)
+    if cfg.qk_norm:
+        q = attn.rmsnorm_headwise(q, p["q_norm"], cfg.norm_eps)
+        k = attn.rmsnorm_headwise(k, p["k_norm"], cfg.norm_eps)
+    q = attn.apply_rope(q, positions, cfg.rope_theta)
+    k = attn.apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, _heads_spec(sh))
+
+    if kv_layer is not None:                      # decode path
+        k_c, v_c = kv_layer
+        out, k_c, v_c = attn.attention_decode(q, k_c, v_c, k, v, cache_pos)
+        aux = (k_c, v_c)
+    else:
+        # K/V stay at n_kv heads, replicated over the model axis (they are
+        # small); the GQA broadcast happens per flash block.  Only Q (and
+        # the output) shard by head — avoids the S-shard <-> head-shard
+        # resharding that forces SPMD full rematerialization.
+        kv_spec = P(sh.batch, None, None, None) \
+            if (sh.batch_axes or sh.model_axis) else P()
+        k = shard(k, kv_spec)
+        v = shard(v, kv_spec)
+        if s <= block_kv:
+            out = attn.attention_full(q, k, v, causal=True)
+        else:
+            out = attn.attention_flash_scan(q, k, v, block_kv=block_kv,
+                                            causal=True,
+                                            unroll=cfg.attn_unroll)
+        aux = (k, v)                              # raw kv for prefill cache
+    out = out.reshape(b, s, nh * hd) @ p["wo"]
+    return out, aux
+
+
+def _ffn_block(p: Params, cfg: LMConfig, h: jax.Array, sh: LMSharding
+               ) -> Tuple[jax.Array, jax.Array]:
+    x = _rmsnorm(h, p["ffn_norm"], cfg.norm_eps)
+    if cfg.moe is None:
+        h1 = x @ p["w1"]
+        h3 = x @ p["w3"]
+        y = (jax.nn.silu(h1.astype(jnp.float32)).astype(h1.dtype) * h3) \
+            @ p["w2"]
+        return y, jnp.zeros((), jnp.float32)
+    b, s, d = x.shape
+    mo = cfg.moe
+    if s == 1:                                    # decode: one global group
+        xg = x.reshape(1, b, d)
+        tokens_per_group = b
+    else:                                         # train/prefill: group=row
+        xg = x
+        tokens_per_group = s
+    capacity = max(mo.top_k, int(mo.capacity_factor * tokens_per_group
+                                 * mo.top_k / mo.n_experts))
+    from repro.utils.sharding import current_mesh
+    mesh = current_mesh()
+    # shard_map MoE wins for train/prefill (many tokens amortize the
+    # explicit weight gathers); decode (s==1) keeps the GSPMD path —
+    # measured 14x collective regression otherwise (llama4 decode_32k)
+    if (cfg.moe_impl == "shard_map" and s > 1 and mesh is not None
+            and sh.model_axis and sh.model_axis in mesh.axis_names):
+        y, aux = moe_lib.moe_ffn_shard_map(
+            xg, p["router"], p["w1"], p["w3"], p["w2"], mo.top_k,
+            capacity, mesh, group_axes=sh.batch if s > 1 else None,
+            expert_axis=sh.model_axis, fsdp_axis=sh.fsdp_axis)
+    else:
+        y, aux = moe_lib.moe_ffn(
+            xg, p["router"], p["w1"], p["w3"], p["w2"], mo.top_k,
+            capacity, group_axes=sh.batch if s > 1 else None,
+            expert_axis=sh.model_axis or None)
+    return y.reshape(b, s, d), aux
+
+
+def _make_layer_fn(cfg: LMConfig, sh: LMSharding, mode: str,
+                   block_kv: int, positions, cache_pos):
+    seq_sharded = mode in ("train", "prefill")
+
+    def layer(h, p):
+        out, kv = _attention_block(p, cfg, h, positions, sh, None, None,
+                                   block_kv)
+        h = h + out
+        h = shard(h, _h_spec(sh, seq_sharded))
+        y, aux = _ffn_block(p, cfg, h, sh)
+        h = h + y
+        h = shard(h, _h_spec(sh, seq_sharded))
+        return h, kv, aux
+
+    return layer
+
+
+_REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def forward(params: Params, cfg: LMConfig, tokens: jax.Array,
+            sh: LMSharding = NO_SHARD, mode: str = "train",
+            cache: Optional[KVCache] = None,
+            block_kv: int = 0
+            ) -> Tuple[jax.Array, Optional[KVCache], jax.Array]:
+    """-> (logits, cache', moe_aux_loss).
+
+    mode "train"/"prefill": tokens (B, S); prefill additionally returns the
+    filled KVCache.  mode "decode": tokens (B, 1) + ``cache`` required.
+    """
+    b, s = tokens.shape
+    block_kv = block_kv or cfg.block_kv
+    dt = _dt(cfg)
+    h = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    seq_sharded = mode in ("train", "prefill")
+    h = shard(h, _h_spec(sh, seq_sharded))
+
+    def layer_slice(i):
+        return jax.tree_util.tree_map(lambda x: x[i], params["layers"])
+
+    if mode == "decode":
+        assert cache is not None
+        positions = (cache.pos + jnp.arange(s))[None, :]
+
+        def dec_body(h, xs):
+            p, k_c, v_c = xs
+            out, (k_c, v_c) = _attention_block(
+                p, cfg, h, positions, sh, (k_c, v_c), cache.pos, block_kv)
+            h = h + out
+            y, _ = _ffn_block(p, cfg, h, sh)
+            h = h + y
+            return h, (k_c, v_c)
+
+        if cfg.scan_layers:
+            h, (k_new, v_new) = jax.lax.scan(
+                dec_body, h, (params["layers"], cache.k, cache.v))
+        else:
+            ks, vs = [], []
+            for i in range(cfg.n_layers):
+                h, (k_i, v_i) = dec_body(
+                    h, (layer_slice(i), cache.k[i], cache.v[i]))
+                ks.append(k_i)
+                vs.append(v_i)
+            k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+        new_cache = KVCache(k=k_new, v=v_new, pos=cache.pos + s)
+        aux_total = jnp.zeros((), jnp.float32)
+    else:
+        positions = jnp.arange(s)[None, :]
+        layer_fn = _make_layer_fn(cfg, sh, mode, block_kv, positions, None)
+        policy = _REMAT_POLICIES[cfg.remat]
+        if policy is not None:
+            layer_fn = jax.checkpoint(layer_fn, policy=policy)
+        elif cfg.remat == "none":
+            pass
+
+        want_cache = mode == "prefill"
+
+        if cfg.scan_layers:
+            def scan_body(carry, p):
+                h, aux = carry
+                h, kv, aux_l = layer_fn(h, p)
+                ys = kv if want_cache else None
+                return (h, aux + aux_l), ys
+
+            (h, aux_total), kvs = jax.lax.scan(
+                scan_body, (h, jnp.zeros((), jnp.float32)),
+                params["layers"])
+        else:
+            aux_total = jnp.zeros((), jnp.float32)
+            kv_list = []
+            for i in range(cfg.n_layers):
+                h, kv, aux_l = layer_fn(h, layer_slice(i))
+                aux_total = aux_total + aux_l
+                kv_list.append(kv)
+            kvs = (jnp.stack([k for k, _ in kv_list]),
+                   jnp.stack([v for _, v in kv_list])) if want_cache \
+                else None
+        if want_cache:
+            new_cache = KVCache(k=kvs[0], v=kvs[1],
+                                pos=jnp.asarray(s, jnp.int32))
+        else:
+            new_cache = None
+
+    h = _rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["lm_head"]
+    if cfg.padded_vocab != cfg.vocab:      # mask vocab-padding logits
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(pad_mask, logits, -1e30)
+    if sh.batch_axes or sh.model_axis:
+        logits = shard(logits, P(sh.batch, None, sh.model_axis or None))
+    return logits, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Losses / steps
+# ---------------------------------------------------------------------------
+
+def lm_loss(params: Params, cfg: LMConfig, batch: Dict[str, jax.Array],
+            sh: LMSharding = NO_SHARD, block_kv: int = 0,
+            aux_weight: float = 0.01) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Next-token cross entropy; labels < 0 are masked."""
+    logits, _, aux = forward(params, cfg, batch["tokens"], sh, "train",
+                             block_kv=block_kv)
+    labels = batch["labels"]
+    mask = labels >= 0
+    logits32 = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(
+        logits32, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    ce = jnp.where(mask, logz - gold, 0.0)
+    ntok = jnp.maximum(jnp.sum(mask), 1)
+    loss = jnp.sum(ce) / ntok + aux_weight * aux
+    return loss, dict(ce=jnp.sum(ce) / ntok, moe_aux=aux, n_tokens=ntok)
+
+
+def decode_step(params: Params, cfg: LMConfig, tokens: jax.Array,
+                cache: KVCache, sh: LMSharding = NO_SHARD
+                ) -> Tuple[jax.Array, KVCache]:
+    """serve_step: one new token per sequence against the KV cache."""
+    logits, new_cache, _ = forward(params, cfg, tokens, sh, "decode",
+                                   cache=cache)
+    return logits, new_cache
+
+
+def prefill(params: Params, cfg: LMConfig, tokens: jax.Array,
+            sh: LMSharding = NO_SHARD, block_kv: int = 0
+            ) -> Tuple[jax.Array, KVCache]:
+    logits, cache, _ = forward(params, cfg, tokens, sh, "prefill",
+                               block_kv=block_kv)
+    return logits, cache
+
+
+def greedy_generate(params: Params, cfg: LMConfig, prompt: jax.Array,
+                    n_steps: int, sh: LMSharding = NO_SHARD) -> jax.Array:
+    """Tiny reference sampler (used by tests/examples, not the dry-run)."""
+    b, s = prompt.shape
+    logits, cache = prefill(params, cfg, prompt, sh)
+    # pad cache capacity for generation
+    pad = n_steps
+    cache = KVCache(
+        k=jnp.pad(cache.k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        v=jnp.pad(cache.v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        pos=cache.pos)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(prompt.dtype)
+    outs = [tok]
+    for _ in range(n_steps - 1):
+        logits, cache = decode_step(params, cfg, tok, cache, sh)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(prompt.dtype)
+        outs.append(tok)
+    return jnp.concatenate(outs, axis=1)

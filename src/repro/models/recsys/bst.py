@@ -1,0 +1,115 @@
+"""BST [arXiv:1905.06874] — Behavior Sequence Transformer (Alibaba).
+
+The target item is appended to the behavior sequence; a small transformer
+block (post-LN, as in the paper) crosses them; outputs are flattened and
+concatenated with user/context features into the final MLP.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import RecsysConfig
+from repro.core.losses import bce_logits
+from repro.models.dense import init_layernorm, init_linear, init_mlp, \
+    layernorm, linear, mlp
+from repro.models.recsys import embedding as emb
+from repro.utils.sharding import shard
+
+Params = Dict[str, Any]
+
+
+def init(key: jax.Array, cfg: RecsysConfig) -> Params:
+    d = 2 * cfg.embed_dim            # item + cate embedding per position
+    ks = jax.random.split(key, 8 + cfg.n_blocks)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        kb = jax.random.split(ks[8 + i], 6)
+        blocks.append({
+            "wq": init_linear(kb[0], d, d),
+            "wk": init_linear(kb[1], d, d),
+            "wv": init_linear(kb[2], d, d),
+            "wo": init_linear(kb[3], d, d),
+            "ln1": init_layernorm(d),
+            "ffn1": init_linear(kb[4], d, 4 * d),
+            "ffn2": init_linear(kb[5], 4 * d, d),
+            "ln2": init_layernorm(d),
+        })
+    d_cat = d * (cfg.seq_len + 1) + 2 * cfg.embed_dim
+    return {
+        "tables": emb.init_tables(ks[0], cfg.tables),
+        "pos": jax.random.normal(ks[1], (cfg.seq_len + 1, d)) * 0.02,
+        "blocks": blocks,
+        "head": init_mlp(ks[2], d_cat, cfg.top_mlp + (1,)),
+    }
+
+
+def _block(bp: Params, x: jax.Array, n_heads: int) -> jax.Array:
+    b = x.shape[:-2]
+    s, d = x.shape[-2:]
+    hd = d // n_heads
+    q = linear(bp["wq"], x).reshape(*b, s, n_heads, hd)
+    k = linear(bp["wk"], x).reshape(*b, s, n_heads, hd)
+    v = linear(bp["wv"], x).reshape(*b, s, n_heads, hd)
+    logits = jnp.einsum("...shd,...thd->...hst", q, k) / (hd ** 0.5)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("...hst,...thd->...shd", w, v).reshape(*b, s, d)
+    x = layernorm(bp["ln1"], x + linear(bp["wo"], o))
+    h = jax.nn.relu(linear(bp["ffn1"], x))
+    return layernorm(bp["ln2"], x + linear(bp["ffn2"], h))
+
+
+def forward(p: Params, cfg: RecsysConfig, batch: Dict[str, jax.Array],
+            batch_spec: P = P()) -> jax.Array:
+    t = p["tables"]
+    hist = jnp.concatenate([
+        emb.lookup(t["item_id"], batch["hist_items"]),
+        emb.lookup(t["cate_id"], batch["hist_cates"])], -1)  # (B,S,2e)
+    target = jnp.concatenate([
+        emb.lookup(t["item_id"], batch["target_item"]),
+        emb.lookup(t["cate_id"], batch["target_cate"])], -1)
+    user = jnp.concatenate([
+        emb.lookup(t["user_id"], batch["user_id"]),
+        emb.lookup(t["context"], batch["context"])], -1)
+
+    if target.ndim == 3:                       # candidate axis (B, C, 2e)
+        bsz, c = target.shape[:2]
+        seq = jnp.concatenate(
+            [jnp.broadcast_to(hist[:, None], (bsz, c) + hist.shape[1:]),
+             target[:, :, None]], axis=-2)     # (B,C,S+1,2e)
+        user = jnp.broadcast_to(user[:, None], (bsz, c, user.shape[-1]))
+        seq = seq + p["pos"]
+        # retrieval: the CANDIDATE axis (axis 1) carries the parallelism
+        seq = shard(seq, P(None, *batch_spec, None, None))
+    else:
+        seq = jnp.concatenate([hist, target[:, None]], axis=-2)
+        seq = seq + p["pos"]
+        seq = shard(seq, P(*batch_spec, *([None] * (seq.ndim - 1))))
+    for bp in p["blocks"]:
+        seq = _block(bp, seq, cfg.n_heads)
+    flat = seq.reshape(*seq.shape[:-2], -1)
+    x = jnp.concatenate([flat, user], -1)
+    return mlp(p["head"], x)[..., 0]
+
+
+def loss(p: Params, cfg: RecsysConfig, batch: Dict[str, jax.Array],
+         batch_spec: P = P()) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits = forward(p, cfg, batch, batch_spec)
+    return (bce_logits(logits, batch["label"].astype(logits.dtype)),
+            dict(logit_mean=jnp.mean(logits)))
+
+
+def serve(p: Params, cfg: RecsysConfig, batch: Dict[str, jax.Array],
+          batch_spec: P = P()) -> jax.Array:
+    return jax.nn.sigmoid(forward(p, cfg, batch, batch_spec))
+
+
+def retrieval(p: Params, cfg: RecsysConfig, batch: Dict[str, jax.Array],
+              batch_spec: P = P()) -> jax.Array:
+    b2 = dict(batch)
+    b2["target_item"] = batch["cand_items"][None, :]
+    b2["target_cate"] = batch["cand_cates"][None, :]
+    return forward(p, cfg, b2, batch_spec)[0]

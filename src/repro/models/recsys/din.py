@@ -1,0 +1,124 @@
+"""DIN [arXiv:1706.06978] — Deep Interest Network.
+
+Target attention: per history item, an attention MLP scores the
+interaction [h, t, h - t, h * t] between history embedding h and target
+embedding t; weighted-sum pooling of history; concat with user/target/
+context features into the final MLP.  Used in this system both as an
+assigned architecture and as the archetype of the paper's "VQ
+Complicated" retrieval *ranking step* (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import RecsysConfig
+from repro.core.losses import bce_logits
+from repro.models.dense import init_mlp, mlp
+from repro.models.recsys import embedding as emb
+from repro.utils.sharding import shard
+
+Params = Dict[str, Any]
+
+
+def init(key: jax.Array, cfg: RecsysConfig) -> Params:
+    kt, ka, km = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    # user profile + attention-pooled hist (item+cate) + target + context
+    d_cat = d * 6
+    return {
+        "tables": emb.init_tables(kt, cfg.tables),
+        "attn": init_mlp(ka, 8 * d, cfg.attn_mlp + (1,)),
+        "head": init_mlp(km, d_cat, cfg.top_mlp + (1,)),
+    }
+
+
+def _hist_and_target(p: Params, batch: Dict[str, jax.Array]
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    t = p["tables"]
+    hist = jnp.concatenate([
+        emb.lookup(t["item_id"], batch["hist_items"]),
+        emb.lookup(t["cate_id"], batch["hist_cates"])], -1)   # (B,S,2d)
+    target = jnp.concatenate([
+        emb.lookup(t["item_id"], batch["target_item"]),
+        emb.lookup(t["cate_id"], batch["target_cate"])], -1)  # (...,2d)
+    user = jnp.concatenate([
+        emb.lookup(t["user_id"], batch["user_id"]),
+        emb.lookup(t["context"], batch["context"])], -1)      # (B,2d)
+    return hist, target, user
+
+
+def attention_pool(p: Params, hist: jax.Array, target: jax.Array,
+                   mask: jax.Array | None = None,
+                   cand_spec: P | None = None) -> jax.Array:
+    """DIN local activation unit. hist (B,S,D), target (..., D) -> (..., D).
+
+    Supports a candidate axis: target (B,C,D) pools hist per candidate;
+    ``cand_spec`` pins the candidate-axis sharding of the big (B,C,S,4D)
+    interaction tensor.
+    """
+    if target.ndim == hist.ndim:                      # (B, C, D) candidates
+        h = hist[:, None]                             # (B,1,S,D)
+        tt = target[:, :, None]                       # (B,C,1,D)
+        tt = jnp.broadcast_to(tt, h.shape[:1] + (target.shape[1],
+                                                 hist.shape[1],
+                                                 hist.shape[-1]))
+        h = jnp.broadcast_to(h, tt.shape)
+    else:                                             # (B, D) single target
+        h = hist
+        tt = jnp.broadcast_to(target[:, None, :], hist.shape)
+    x = jnp.concatenate([h, tt, h - tt, h * tt], -1)
+    if cand_spec is not None and x.ndim == 4:
+        x = shard(x, cand_spec)
+    logits = mlp(p["attn"], x, act=jax.nn.sigmoid)[..., 0]   # (..., S)
+    if mask is not None:
+        while mask.ndim < logits.ndim:
+            mask = mask[:, None]
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("...s,...sd->...d", w, h)
+
+
+def forward(p: Params, cfg: RecsysConfig, batch: Dict[str, jax.Array],
+            batch_spec: P = P()) -> jax.Array:
+    """Logits. target_item (B,) -> (B,); target_item (B,C) -> (B,C)."""
+    hist, target, user = _hist_and_target(p, batch)
+    if target.ndim == 3:
+        # retrieval: candidate axis (axis 1) carries the parallelism
+        cand_spec = P(None, *batch_spec, None, None)
+        pooled = attention_pool(p, hist, target,
+                                batch.get("hist_mask"), cand_spec)
+        b, c = target.shape[:2]
+        user_b = jnp.broadcast_to(user[:, None], (b, c, user.shape[-1]))
+    else:
+        hist = shard(hist, P(*batch_spec, None, None))
+        pooled = attention_pool(p, hist, target,
+                                batch.get("hist_mask"))     # (...,2d)
+        user_b = user
+    x = jnp.concatenate([user_b, pooled, target], -1)
+    return mlp(p["head"], x)[..., 0]
+
+
+def loss(p: Params, cfg: RecsysConfig, batch: Dict[str, jax.Array],
+         batch_spec: P = P()) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits = forward(p, cfg, batch, batch_spec)
+    l = bce_logits(logits, batch["label"].astype(logits.dtype))
+    return l, dict(logit_mean=jnp.mean(logits))
+
+
+def serve(p: Params, cfg: RecsysConfig, batch: Dict[str, jax.Array],
+          batch_spec: P = P()) -> jax.Array:
+    """Pointwise scoring (serve_p99 / serve_bulk cells)."""
+    return jax.nn.sigmoid(forward(p, cfg, batch, batch_spec))
+
+
+def retrieval(p: Params, cfg: RecsysConfig, batch: Dict[str, jax.Array],
+              batch_spec: P = P()) -> jax.Array:
+    """retrieval_cand cell: one user against (C,) candidate items."""
+    b2 = dict(batch)
+    b2["target_item"] = batch["cand_items"][None, :]      # (1, C)
+    b2["target_cate"] = batch["cand_cates"][None, :]
+    return forward(p, cfg, b2, batch_spec)[0]

@@ -1,0 +1,144 @@
+"""Sharded embedding tables + EmbeddingBag, the recsys hot path.
+
+JAX has no native EmbeddingBag or CSR sparse; per the assignment this IS
+part of the system: bag lookups are built from ``jnp.take`` +
+``jax.ops.segment_sum``, with an optional Pallas kernel for the fused
+gather-reduce (kernels/embedding_bag.py).
+
+Distribution: huge tables (vocab >= row_shard_threshold) are row-sharded
+over the ``model`` mesh axis; lookups use sharding constraints so GSPMD
+lowers them to masked local gathers + all-reduce over ``model`` (verified
+in the dry-run HLO).  Small tables are replicated.  A manual shard_map
+path (`lookup_manual_psum`) pins the exact collective pattern and is used
+by the perf hillclimb.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import EmbeddingSpec
+from repro.core.freq_estimator import hash_ids
+from repro.utils.sharding import shard
+
+ROW_SHARD_THRESHOLD = 262_144     # tables at least this tall: rows/model
+ROW_SHARD_2D_THRESHOLD = 1_000_000  # big tables: rows over (data, model)
+
+
+def table_partition_spec(spec: EmbeddingSpec) -> P:
+    """Row sharding by size, guarded by mesh divisibility (16 x 16)."""
+    if spec.vocab >= ROW_SHARD_2D_THRESHOLD and spec.vocab % 256 == 0:
+        return P(("data", "model"), None)
+    if spec.vocab >= ROW_SHARD_THRESHOLD and spec.vocab % 16 == 0:
+        return P("model", None)
+    return P(None, None)
+
+
+def init_tables(key: jax.Array, specs: Sequence[EmbeddingSpec],
+                dtype=jnp.float32) -> Dict[str, jax.Array]:
+    keys = jax.random.split(key, len(specs))
+    out = {}
+    for k, s in zip(keys, specs):
+        out[s.name] = (jax.random.normal(k, (s.vocab, s.dim), jnp.float32)
+                       * (s.dim ** -0.5)).astype(dtype)
+    return out
+
+
+def lookup(table: jax.Array, ids: jax.Array,
+           hashed: bool = True) -> jax.Array:
+    """Single-hot lookup; ids of any shape -> (..., dim).
+
+    ``hashed=True`` maps arbitrary id spaces into the table capacity with
+    the multiplicative hash (production ids are unbounded; collisions are
+    measured in tests).
+    """
+    vocab = table.shape[0]
+    idx = hash_ids(ids, vocab) if hashed else jnp.clip(ids, 0, vocab - 1)
+    out = jnp.take(table, idx, axis=0)
+    return out
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array,
+                  combiner: str = "sum",
+                  weights: Optional[jax.Array] = None,
+                  valid: Optional[jax.Array] = None,
+                  hashed: bool = True) -> jax.Array:
+    """Fixed-size bag lookup: ids (..., bag) -> (..., dim).
+
+    This is nn.EmbeddingBag(mode=combiner) for dense rectangular bags;
+    ragged bags go through ``embedding_bag_ragged``.
+    """
+    emb = lookup(table, ids, hashed)                      # (..., bag, d)
+    if weights is not None:
+        emb = emb * weights[..., None]
+    if valid is not None:
+        emb = jnp.where(valid[..., None], emb, 0.0)
+        denom = jnp.maximum(jnp.sum(valid, axis=-1, keepdims=True), 1)
+    else:
+        denom = ids.shape[-1]
+    s = jnp.sum(emb, axis=-2)
+    if combiner == "sum":
+        return s
+    if combiner == "mean":
+        return s / denom
+    raise ValueError(f"combiner {combiner!r}")
+
+
+def embedding_bag_ragged(table: jax.Array, flat_ids: jax.Array,
+                         segment_ids: jax.Array, n_segments: int,
+                         combiner: str = "sum",
+                         weights: Optional[jax.Array] = None,
+                         hashed: bool = True) -> jax.Array:
+    """Ragged EmbeddingBag: CSR-style (values, segment_ids) -> (B, dim)."""
+    emb = lookup(table, flat_ids, hashed)
+    if weights is not None:
+        emb = emb * weights[:, None]
+    s = jax.ops.segment_sum(emb, segment_ids, n_segments)
+    if combiner == "sum":
+        return s
+    if combiner == "mean":
+        cnt = jax.ops.segment_sum(
+            jnp.ones_like(segment_ids, jnp.float32), segment_ids, n_segments)
+        return s / jnp.maximum(cnt, 1.0)[:, None]
+    raise ValueError(f"combiner {combiner!r}")
+
+
+def lookup_manual_psum(table: jax.Array, ids: jax.Array,
+                       axis: str = "model",
+                       hashed: bool = True) -> jax.Array:
+    """Manual row-sharded lookup; call INSIDE shard_map.
+
+    table: local shard (rows/n_shards, d); ids: replicated global ids.
+    Masked local gather + psum over the model axis -- the canonical
+    "model-parallel embedding" collective pattern.
+    """
+    n_shards = jax.lax.psum(1, axis)
+    my = jax.lax.axis_index(axis)
+    local_rows = table.shape[0]
+    vocab = local_rows * n_shards
+    idx = hash_ids(ids, vocab) if hashed else jnp.clip(ids, 0, vocab - 1)
+    loc = idx - my * local_rows
+    ok = (loc >= 0) & (loc < local_rows)
+    emb = jnp.take(table, jnp.clip(loc, 0, local_rows - 1), axis=0)
+    emb = jnp.where(ok[..., None], emb, 0.0)
+    return jax.lax.psum(emb, axis)
+
+
+class TableSpecMap(NamedTuple):
+    specs: Tuple[EmbeddingSpec, ...]
+
+    def partition_specs(self) -> Dict[str, P]:
+        return {s.name: table_partition_spec(s) for s in self.specs}
+
+
+def constrain_tables(tables: Dict[str, jax.Array],
+                     specs: Sequence[EmbeddingSpec]) -> Dict[str, jax.Array]:
+    """Apply row-sharding constraints to every table (inside jit)."""
+    out = {}
+    by_name = {s.name: s for s in specs}
+    for name, t in tables.items():
+        out[name] = shard(t, table_partition_spec(by_name[name]))
+    return out

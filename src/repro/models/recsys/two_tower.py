@@ -1,0 +1,99 @@
+"""Two-tower retrieval [Covington RecSys'16, Yi et al. RecSys'19].
+
+This arch IS the paper's indexing-step model family (DESIGN.md §4): the
+user/item towers produce the intermediate embeddings u, v of Fig. 1; the
+streaming-VQ index attaches on the item tower (vq_clusters=16384), and
+training uses the in-batch sampled softmax with the logQ correction —
+the same L_aux of Eq. 1.
+
+Outputs follow Eq. 11's decomposition: the item tower emits
+(personality embedding, popularity bias).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import RecsysConfig
+from repro.core import losses
+from repro.models.dense import init_mlp, mlp
+from repro.models.recsys import embedding as emb
+from repro.utils.sharding import shard
+
+Params = Dict[str, Any]
+
+
+def init(key: jax.Array, cfg: RecsysConfig) -> Params:
+    kt, ku, ki = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    return {
+        "tables": emb.init_tables(kt, cfg.tables),
+        "user_tower": init_mlp(ku, 2 * d, cfg.tower_mlp),
+        # +1: popularity bias head (Eq. 11)
+        "item_tower": init_mlp(
+            ki, 2 * d, cfg.tower_mlp[:-1] + (cfg.tower_mlp[-1] + 1,)),
+    }
+
+
+def encode_user(p: Params, cfg: RecsysConfig,
+                batch: Dict[str, jax.Array]) -> jax.Array:
+    t = p["tables"]
+    uid = emb.lookup(t["user_id"], batch["user_id"])
+    hist = emb.embedding_bag(t["user_hist"], batch["user_hist"], "mean")
+    return mlp(p["user_tower"], jnp.concatenate([uid, hist], -1))
+
+
+def encode_item(p: Params, cfg: RecsysConfig, item_id: jax.Array,
+                item_cate: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    t = p["tables"]
+    iid = emb.lookup(t["item_id"], item_id)
+    cat = emb.lookup(t["item_cate"], item_cate)
+    v = mlp(p["item_tower"], jnp.concatenate([iid, cat], -1))
+    return v[..., :-1], v[..., -1]
+
+
+def loss(p: Params, cfg: RecsysConfig, batch: Dict[str, jax.Array],
+         batch_spec: P = P(),
+         log_q: Optional[jax.Array] = None
+         ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """In-batch sampled softmax (L_aux, Eq. 1) with optional logQ debias."""
+    u = encode_user(p, cfg, batch)
+    v, v_bias = encode_item(p, cfg, batch["item_id"], batch["item_cate"])
+    u = shard(u, P(*batch_spec, None))
+    v = shard(v, P(*batch_spec, None))
+    l = losses.l_aux(u, v, v_bias, log_q)
+    logits = losses.build_logits(u, v, v_bias, log_q)
+    acc = jnp.mean(jnp.argmax(logits, -1) == jnp.arange(logits.shape[0]))
+    return l, dict(inbatch_acc=acc)
+
+
+def serve(p: Params, cfg: RecsysConfig, batch: Dict[str, jax.Array],
+          batch_spec: P = P()) -> jax.Array:
+    """Pointwise user-item scores (serve cells)."""
+    u = encode_user(p, cfg, batch)
+    v, v_bias = encode_item(p, cfg, batch["item_id"], batch["item_cate"])
+    return jnp.sum(u * v, axis=-1) + v_bias
+
+
+def retrieval(p: Params, cfg: RecsysConfig, batch: Dict[str, jax.Array],
+              batch_spec: P = P(), top_k: int = 0
+              ) -> Dict[str, jax.Array]:
+    """retrieval_cand cell: one user against (C,) candidates, batched dot.
+
+    The candidate matrix is scored with a single (1, d) x (d, C) matmul —
+    the brute-force MIPS path; the VQ-indexed path (cluster ranking +
+    merge sort) lives in core/retriever.serve and is compared against this
+    in benchmarks/bench_recall.py.
+    """
+    u = encode_user(p, cfg, batch)                       # (1, d)
+    v, v_bias = encode_item(p, cfg, batch["cand_items"],
+                            batch["cand_cates"])         # (C, d), (C,)
+    v = shard(v, P(*batch_spec, None))
+    scores = (u @ v.T)[0] + v_bias                       # (C,)
+    if top_k:
+        top_s, top_i = jax.lax.top_k(scores, top_k)
+        return dict(scores=scores, top_scores=top_s, top_idx=top_i)
+    return dict(scores=scores)

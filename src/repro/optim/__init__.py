@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (adafactor, adagrad, adamw,
+                                    clip_by_global_norm, multi_optimizer,
+                                    sgd_momentum)
+from repro.optim.schedules import constant, warmup_cosine

@@ -1,0 +1,220 @@
+"""Functional optimizers (optax-style triples, no external deps).
+
+Each optimizer is ``(init_fn, update_fn)`` with
+  init(params) -> state
+  update(grads, state, params, step) -> (new_params, new_state)
+
+``multi_optimizer`` routes parameter subtrees to different optimizers by
+a path predicate — the production recsys pattern (Adagrad on embedding
+tables, Adam on dense nets) and the big-LM pattern (Adafactor on the
+giant matrices to keep optimizer HBM negligible; see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Grads = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], Any]
+    update: Callable[[Grads, Any, Params, jax.Array],
+                     Tuple[Params, Any]]
+
+
+def _tmap(f, *trees, **kw):
+    return jax.tree_util.tree_map(f, *trees, **kw)
+
+
+def clip_by_global_norm(grads: Grads, max_norm: float) -> Grads:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return _tmap(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                 grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: Callable[[jax.Array], jax.Array] | float,
+          b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        return {
+            "m": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), m, v
+
+        out = _tmap(upd, grads, state["m"], state["v"], params)
+        new_p = _tmap(lambda o: o[0], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        new_m = _tmap(lambda o: o[1], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        new_v = _tmap(lambda o: o[2], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adagrad (embedding tables)
+# ---------------------------------------------------------------------------
+
+def adagrad(lr: float = 0.05, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        return _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, step):
+        def upd(g, a, p):
+            g32 = g.astype(jnp.float32)
+            a = a + g32 * g32
+            return ((p.astype(jnp.float32)
+                     - lr * g32 / (jnp.sqrt(a) + eps)).astype(p.dtype), a)
+
+        out = _tmap(upd, grads, state, params)
+        new_p = _tmap(lambda o: o[0], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        new_a = _tmap(lambda o: o[1], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, new_a
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment — O(r + c) state per matrix)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr: Callable[[jax.Array], jax.Array] | float = 1e-2,
+              decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return _tmap(one, params)
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                r_factor = jax.lax.rsqrt(
+                    vr / jnp.maximum(
+                        jnp.mean(vr, axis=-1, keepdims=True), eps))
+                c_factor = jax.lax.rsqrt(vc)
+                u = g32 * r_factor[..., None] * c_factor[..., None, :]
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g32 * jax.lax.rsqrt(v)
+                new_s = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), new_s
+
+        is_state = lambda x: isinstance(x, dict) and (
+            "v" in x or "vr" in x)
+        out = jax.tree_util.tree_map(upd, grads, state, params,
+                                     is_leaf=lambda x: is_state(x))
+        is_pair = lambda x: isinstance(x, tuple)
+        new_p = _tmap(lambda o: o[0], out, is_leaf=is_pair)
+        new_s = _tmap(lambda o: o[1], out, is_leaf=is_pair)
+        return new_p, new_s
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# SGD momentum
+# ---------------------------------------------------------------------------
+
+def sgd_momentum(lr: float = 0.01, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, step):
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+        out = _tmap(upd, grads, state, params)
+        is_pair = lambda x: isinstance(x, tuple)
+        return (_tmap(lambda o: o[0], out, is_leaf=is_pair),
+                _tmap(lambda o: o[1], out, is_leaf=is_pair))
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Path-routed multi-optimizer
+# ---------------------------------------------------------------------------
+
+def multi_optimizer(route: Callable[[Tuple[Any, ...]], str],
+                    optimizers: Dict[str, Optimizer]) -> Optimizer:
+    """Route each param leaf (by its tree path) to a named optimizer.
+
+    ``route(path) -> name``; e.g. embedding tables -> "adagrad",
+    dense nets -> "adamw", giant matrices -> "adafactor".
+    Per-leaf optimizer states live at the leaf position of the params
+    treedef (flatten_up_to recovers them without structure clashes).
+    """
+    def init(params):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        states = [optimizers[route(path)].init(p) for path, p in flat]
+        return jax.tree_util.tree_unflatten(treedef, states)
+
+    def update(grads, state, params, step):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        g_flat = treedef.flatten_up_to(grads)
+        s_flat = treedef.flatten_up_to(state)
+        new_p, new_s = [], []
+        for (path, p), g, s in zip(flat, g_flat, s_flat):
+            np_, ns = optimizers[route(path)].update(g, s, p, step)
+            new_p.append(np_)
+            new_s.append(ns)
+        return (jax.tree_util.tree_unflatten(treedef, new_p),
+                jax.tree_util.tree_unflatten(treedef, new_s))
+
+    return Optimizer(init, update)

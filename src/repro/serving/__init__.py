@@ -1,0 +1,2 @@
+from repro.serving.service import RetrievalService, ServeStats, \
+    drive_requests

@@ -1,0 +1,103 @@
+"""Retrieval service: the two-step serving pipeline of Fig. 1 / §3.4.
+
+RetrievalService owns
+  - the trained retriever params,
+  - the live IndexState (codebook + PS tables, swapped in atomically from
+    the training side — the 5-10 min "model dump period" of §3.1 is the
+    swap cadence; assignments inside it are already real-time),
+  - the ServingIndex (Appendix-B compact layout), rebuilt asynchronously
+    from the assignment store ("candidate scanning" — never blocks
+    training OR serving).
+
+serve_batch: cluster ranking (Eq. 11) -> k-way chunked merge sort
+(Alg. 1) -> ranking-step model -> final ordered candidates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SVQConfig
+from repro.core import assignment_store as astore
+from repro.core import retriever
+
+
+@dataclasses.dataclass
+class ServeStats:
+    n_requests: int = 0
+    n_batches: int = 0
+    total_latency_s: float = 0.0
+    index_rebuilds: int = 0
+    index_swaps: int = 0
+
+    @property
+    def mean_latency_ms(self) -> float:
+        return 1e3 * self.total_latency_s / max(self.n_batches, 1)
+
+
+class RetrievalService:
+    def __init__(self, cfg: SVQConfig, params, index_state,
+                 items_per_cluster: int = 256):
+        self.cfg = cfg
+        self.items_per_cluster = items_per_cluster
+        self.stats = ServeStats()
+        self._lock = threading.Lock()
+        self._params = params
+        self._index_state = index_state
+        self._serving_index = astore.build_serving_index(
+            index_state.store, cfg.n_clusters)
+        self.stats.index_rebuilds += 1
+        self._serve_jit = jax.jit(
+            lambda p, s, idx, b: retriever.serve(
+                p, s, cfg, idx, b,
+                items_per_cluster=items_per_cluster))
+
+    # -- training-side hooks -------------------------------------------------
+    def swap_model(self, params, index_state) -> None:
+        """Atomic model dump swap (the §3.1 5-10 min cadence)."""
+        with self._lock:
+            self._params = params
+            self._index_state = index_state
+            self.stats.index_swaps += 1
+
+    def rebuild_index(self) -> None:
+        """Asynchronous candidate scan -> fresh Appendix-B layout."""
+        with self._lock:
+            state = self._index_state
+        new_index = astore.build_serving_index(state.store,
+                                               self.cfg.n_clusters)
+        with self._lock:
+            self._serving_index = new_index
+            self.stats.index_rebuilds += 1
+
+    # -- request path ----------------------------------------------------------
+    def serve_batch(self, batch: Dict[str, np.ndarray],
+                    task: int = 0) -> Dict[str, np.ndarray]:
+        t0 = time.perf_counter()
+        with self._lock:
+            params, state, idx = (self._params, self._index_state,
+                                  self._serving_index)
+        out = self._serve_jit(params, state, idx,
+                              {k: jnp.asarray(v) for k, v in batch.items()})
+        out = {k: np.asarray(v) for k, v in out.items()}
+        dt = time.perf_counter() - t0
+        self.stats.n_batches += 1
+        self.stats.n_requests += len(batch["user_id"])
+        self.stats.total_latency_s += dt
+        return out
+
+
+def drive_requests(service: RetrievalService, batches: List[Dict],
+                   rebuild_every: int = 0) -> ServeStats:
+    """Batched request driver (examples / benchmarks)."""
+    for i, b in enumerate(batches):
+        service.serve_batch(b)
+        if rebuild_every and (i + 1) % rebuild_every == 0:
+            service.rebuild_index()
+    return service.stats

@@ -1,0 +1,4 @@
+from repro.train import checkpoint
+from repro.train.grad_compress import (Compressed, compress, decompress,
+                                       init_error_feedback)
+from repro.train.loop import LoopConfig, LoopResult, run_loop

@@ -1,0 +1,52 @@
+"""Gradient compression for the DP all-reduce: int8 + error feedback.
+
+1-byte quantization of the gradient halves->quarters the data-parallel
+all-reduce bytes (the dominant collective for the recsys dense nets and
+the LM archs below FSDP threshold).  Error feedback (Karimireddy et al.,
+arXiv:1901.09847) keeps SGD unbiased in the long run: the residual of
+each quantization is added back before the next one.
+
+Usage inside a train step:
+    c, ef = compress(grads, ef)              # int8 payload
+    c = jax.lax.pmean(c.q, 'data') ...       # or GSPMD all-reduce
+    grads = decompress(c)
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Compressed(NamedTuple):
+    q: Any          # int8 pytree
+    scale: Any      # f32 per-leaf scale
+
+
+def init_error_feedback(params: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads: Any, error_feedback: Any
+             ) -> Tuple[Compressed, Any]:
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        new_e = g32 - q.astype(jnp.float32) * scale
+        return (q, scale), new_e
+
+    out = jax.tree_util.tree_map(one, grads, error_feedback)
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 \
+        and not hasattr(x[0], "keys")
+    qs = jax.tree_util.tree_map(lambda o: o[0][0], out, is_leaf=is_pair)
+    ss = jax.tree_util.tree_map(lambda o: o[0][1], out, is_leaf=is_pair)
+    es = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=is_pair)
+    return Compressed(q=qs, scale=ss), es
+
+
+def decompress(c: Compressed) -> Any:
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, c.q, c.scale)

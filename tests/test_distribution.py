@@ -1,0 +1,142 @@
+"""Distribution correctness on a real (8-device) mesh.
+
+Runs in a SUBPROCESS with xla_force_host_platform_device_count=8 (the
+device count locks at first jax init, so the main pytest process must
+stay single-device).  These tests EXECUTE sharded steps, not just
+compile them.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_shard_map_moe_matches_gspmd_on_mesh():
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.models.lm import moe
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rng = np.random.default_rng(0)
+    g, t, d, e, k, cap = 4, 16, 8, 8, 2, 16
+    x = jnp.asarray(rng.normal(size=(g, t, d)).astype(np.float32))
+    router = jnp.asarray(rng.normal(size=(d, e)).astype(np.float32))
+    w1 = jnp.asarray(rng.normal(size=(e, d, 24)).astype(np.float32))
+    w3 = jnp.asarray(rng.normal(size=(e, d, 24)).astype(np.float32))
+    w2 = jnp.asarray(rng.normal(size=(e, 24, d)).astype(np.float32))
+    y_ref, _ = moe.moe_ffn(x, router, w1, w3, w2, k, cap)
+    with mesh:
+        y_sm, _ = jax.jit(lambda *a: moe.moe_ffn_shard_map(
+            *a, top_k=k, capacity=cap, mesh=mesh, group_axes=("data",),
+            expert_axis="model"))(x, router, w1, w3, w2)
+    assert float(jnp.max(jnp.abs(y_ref - y_sm))) < 1e-5
+    print("OK")
+    """)
+
+
+def test_sharded_lm_train_step_executes():
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np, dataclasses
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_smoke
+    from repro.models.lm import transformer as tfm
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = dataclasses.replace(get_smoke("granite-moe-1b-a400m"),
+                              d_model=64, n_heads=8, n_kv_heads=2)
+    sh = tfm.LMSharding(batch_axes=("data",), seq_shard=True)
+    params = tfm.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (8, 64), 0,
+                              cfg.vocab)
+    with mesh:
+        def loss(p):
+            l, m = tfm.lm_loss(p, cfg, dict(tokens=toks, labels=toks),
+                               sh)
+            return l
+        l_sharded, grads = jax.jit(jax.value_and_grad(loss))(params)
+    l_plain = tfm.lm_loss(params, cfg, dict(tokens=toks, labels=toks))[0]
+    assert abs(float(l_sharded) - float(l_plain)) < 5e-2, \
+        (float(l_sharded), float(l_plain))
+    assert np.isfinite(float(l_sharded))
+    print("OK")
+    """)
+
+
+def test_sharded_svq_train_step_executes():
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_smoke
+    from repro.core import retriever
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = get_smoke("svq")
+    params, state = retriever.init(jax.random.PRNGKey(0), cfg)
+    B = 32
+    k = jax.random.PRNGKey(1)
+    batch = dict(
+        user_id=jax.random.randint(k, (B,), 0, cfg.n_users),
+        hist=jax.random.randint(k, (B, cfg.user_hist_len), 0,
+                                cfg.n_items),
+        item_id=jax.random.randint(k, (B,), 0, cfg.n_items),
+        item_cate=jax.random.randint(k, (B,), 0, 64),
+        labels=(jax.random.uniform(k, (B, 1)) > 0.5).astype(jnp.float32))
+    with mesh:
+        grads, new_state, metrics = jax.jit(
+            lambda p, s, b: retriever.train_step(p, s, cfg, b))(
+                params, state, batch)
+        loss = float(metrics["loss"])
+    assert np.isfinite(loss)
+    print("OK")
+    """)
+
+
+def test_microbatch_grad_accumulation_equivalent():
+    """mb=2 grads equal mb=1 grads (f32 accumulation, equal splits)."""
+    import dataclasses
+    sys.path.insert(0, SRC)
+    from repro.configs import get_smoke
+    from repro.models.lm import transformer as tfm
+
+    cfg = dataclasses.replace(get_smoke("smollm-360m"), dtype="float32")
+    params = tfm.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0,
+                              cfg.vocab)
+    batch = dict(tokens=toks, labels=toks)
+
+    def loss_fn(p, b):
+        return tfm.lm_loss(p, cfg, b)[0]
+
+    g_full = jax.grad(loss_fn)(params, batch)
+    # manual 2-way accumulation (mirrors bindings' mb_step)
+    halves = jax.tree_util.tree_map(
+        lambda x: x.reshape((2, 4) + x.shape[1:]), batch)
+    g_mb = jax.tree_util.tree_map(jnp.zeros_like, params)
+    for i in range(2):
+        b_i = jax.tree_util.tree_map(lambda x: x[i], halves)
+        g_i = jax.grad(loss_fn)(params, b_i)
+        g_mb = jax.tree_util.tree_map(lambda a, b: a + b, g_mb, g_i)
+    g_mb = jax.tree_util.tree_map(lambda x: x / 2, g_mb)
+    errs = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))
+                           / (jnp.max(jnp.abs(b)) + 1e-9)), g_mb, g_full)
+    worst = max(jax.tree_util.tree_leaves(errs))
+    # microbatch losses are per-token means of equal splits -> equal
+    assert worst < 5e-5, worst

@@ -1,0 +1,98 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("b,k,d,bb,bk", [
+    (64, 128, 32, 32, 64),
+    (100, 300, 48, 32, 64),      # non-divisible -> padding path
+    (17, 1000, 64, 8, 256),
+    (256, 512, 128, 128, 128),
+])
+def test_vq_assign_sweep(rng, b, k, d, bb, bk):
+    v = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    e = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    r = jnp.asarray(rng.uniform(0.2, 1.0, k).astype(np.float32))
+    got = ops.vq_assign(v, e, r, block_b=bb, block_k=bk)
+    want = ref.vq_assign_ref(v, e, r)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_vq_assign_dtypes(rng, dtype):
+    v = jnp.asarray(rng.normal(size=(32, 16))).astype(dtype)
+    e = jnp.asarray(rng.normal(size=(64, 16))).astype(dtype)
+    r = jnp.ones((64,), jnp.float32)
+    got = ops.vq_assign(v, e, r, block_b=16, block_k=32)
+    want = ref.vq_assign_ref(v, e, r)
+    match = float(jnp.mean((got == want).astype(jnp.float32)))
+    assert match >= (1.0 if dtype == jnp.float32 else 0.95)
+
+
+@pytest.mark.parametrize("v,bag,d,bb", [
+    (100, 4, 16, 4), (333, 7, 32, 8), (50, 1, 8, 2),
+])
+def test_embedding_bag_sweep(rng, v, bag, d, bb):
+    table = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, v, (13, bag)).astype(np.int32))
+    for combiner in ("sum", "mean"):
+        got = ops.embedding_bag(table, ids, combiner, block_b=bb)
+        want = ref.embedding_bag_ref(table, ids, combiner)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,d,k,bn", [
+    (1000, 32, 8, 256), (5000, 64, 50, 512), (777, 16, 16, 128),
+])
+def test_topk_dot_sweep(rng, n, d, k, bn):
+    u = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    items = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    bias = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    vk, ik = ops.topk_dot(u, items, bias, k, block_n=bn)
+    vr, ir = ref.topk_dot_ref(u, items, bias, k)
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vr), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
+
+
+@pytest.mark.parametrize("b,d,bb,bc", [
+    (64, 16, 32, 32), (70, 24, 32, 16), (128, 64, 64, 128),
+])
+def test_inbatch_softmax_sweep(rng, b, d, bb, bc):
+    u = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    bias = jnp.asarray(rng.normal(size=(b,)).astype(np.float32))
+    lq = jnp.asarray(rng.normal(size=(b,)).astype(np.float32))
+    got = ops.inbatch_softmax(u, v, bias, lq, block_b=bb, block_c=bc)
+    want = ref.inbatch_softmax_ref(u, v, bias, lq)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("s,hd,bq,bkv,causal", [
+    (128, 64, 32, 32, True), (256, 32, 64, 32, False),
+    (128, 128, 128, 64, True), (64, 16, 16, 16, True),
+])
+def test_flash_attention_sweep(rng, s, hd, bq, bkv, causal):
+    q = jnp.asarray(rng.normal(size=(s, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(s, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(s, hd)).astype(np.float32))
+    got = ops.flash_attention(q, k, v, causal, bq, bkv)
+    want = ref.flash_attention_ref(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_kernel_integration_with_vq_module(rng):
+    """vq.assign(use_kernel=True) routes through the Pallas kernel."""
+    from repro.core import vq
+    state = vq.init_vq(jax.random.PRNGKey(0), 64, 16)
+    v = jnp.asarray(rng.normal(size=(40, 16)).astype(np.float32))
+    a_kernel = vq.assign(state, v, use_kernel=True)
+    a_plain = vq.assign(state, v, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(a_kernel),
+                                  np.asarray(a_plain))

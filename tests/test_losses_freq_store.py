@@ -1,0 +1,105 @@
+"""Losses (Eq. 1/4/6 + logQ), freq estimator, PS assignment store."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import assignment_store as astore
+from repro.core import freq_estimator as freq
+from repro.core import losses
+
+
+def test_l_aux_matches_manual(rng):
+    b, d = 16, 8
+    u = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    bias = jnp.asarray(rng.normal(size=(b,)).astype(np.float32))
+    got = float(losses.l_aux(u, v, bias))
+    logits = np.asarray(u) @ np.asarray(v).T + np.asarray(bias)[None]
+    lse = np.log(np.exp(logits - logits.max(1, keepdims=True)).sum(1)) \
+        + logits.max(1)
+    want = float(np.mean(lse - np.diagonal(logits)))
+    assert abs(got - want) < 1e-4
+
+
+def test_logq_debias_shifts_logits(rng):
+    b, d = 8, 4
+    u = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    bias = jnp.zeros((b,))
+    lq = jnp.asarray(rng.normal(size=(b,)).astype(np.float32))
+    plain = losses.build_logits(u, v, bias)
+    deb = losses.build_logits(u, v, bias, lq)
+    np.testing.assert_allclose(np.asarray(plain - deb),
+                               np.broadcast_to(np.asarray(lq)[None], (b, b)),
+                               rtol=1e-5)
+
+
+def test_l_ind_grad_goes_to_items_not_clusters():
+    """'Item first' (§3.2): clusters move only by EMA, never by grad."""
+    from repro.core import vq
+    state = vq.init_vq(jax.random.PRNGKey(0), 8, 4)
+    u = jax.random.normal(jax.random.PRNGKey(1), (4, 4))
+    v = jax.random.normal(jax.random.PRNGKey(2), (4, 4))
+
+    def loss_fn(v, w):
+        st = vq.VQState(w=w, c=state.c)
+        a = vq.assign(st, jax.lax.stop_gradient(v))
+        e = vq.quantize(st, v, a)
+        return losses.l_ind(u, v, e, jnp.zeros(4))
+
+    gv = jax.grad(loss_fn, argnums=0)(v, state.w)
+    gw = jax.grad(loss_fn, argnums=1)(v, state.w)
+    assert float(jnp.max(jnp.abs(gv))) > 0        # items receive grads
+    assert float(jnp.max(jnp.abs(gw))) == 0       # codebook gets none
+
+
+def test_freq_estimator_learns_period():
+    state = freq.init_freq(1024, init_interval=100.0)
+    ids = jnp.asarray([7], jnp.int32)
+    # item appears every 5 steps
+    for t in range(5, 301, 5):
+        state, delta = freq.update(state, ids, jnp.asarray(t), gamma=0.3)
+    assert abs(float(delta[0]) - 5.0) < 1.0
+    lq = float(freq.log_q(delta)[0])
+    assert abs(lq + np.log(float(delta[0]))) < 1e-5
+
+
+def test_store_write_read_and_serving_index(rng):
+    store = astore.init_store(256, 4)
+    ids = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    cl = jnp.asarray([1, 0, 1, 2], jnp.int32)
+    emb = jnp.asarray(rng.normal(size=(4, 4)).astype(np.float32))
+    bias = jnp.asarray([0.5, 1.5, 2.5, 0.1], jnp.float32)
+    store = astore.write(store, ids, cl, emb, bias)
+    np.testing.assert_array_equal(np.asarray(astore.read_cluster(store,
+                                                                 ids)), cl)
+    idx = astore.build_serving_index(store, 4)
+    offs = np.asarray(idx.offsets)
+    # cluster 1 holds items 1 and 3, sorted by bias desc (2.5 then 0.5)
+    seg = slice(offs[1], offs[2])
+    np.testing.assert_array_equal(np.asarray(idx.item_ids[seg]), [3, 1])
+    assert np.all(np.diff(np.asarray(idx.item_bias[seg])) <= 0)
+    # valid==True rows only inside offsets range
+    assert offs[-1] == 4
+
+
+def test_store_collision_rate_low(rng):
+    store = astore.init_store(4096, 4)
+    ids = jnp.asarray(rng.choice(10 ** 9, 512, replace=False)
+                      .astype(np.int32))
+    store = astore.write(store, ids, jnp.zeros(512, jnp.int32),
+                         jnp.zeros((512, 4)), jnp.zeros(512))
+    rate = float(astore.collision_rate(store, ids))
+    assert rate < 0.2
+
+
+def test_candidate_stream_refresh_updates_store(rng):
+    """Forward-only writes (no labels) refresh stale assignments."""
+    store = astore.init_store(128, 4)
+    ids = jnp.asarray([5], jnp.int32)
+    store = astore.write(store, ids, jnp.asarray([3], jnp.int32),
+                         jnp.ones((1, 4)), jnp.zeros(1))
+    assert int(astore.read_cluster(store, ids)[0]) == 3
+    store = astore.write(store, ids, jnp.asarray([9], jnp.int32),
+                         jnp.ones((1, 4)) * 2, jnp.zeros(1))
+    assert int(astore.read_cluster(store, ids)[0]) == 9

@@ -1,0 +1,172 @@
+"""MACE: Gaunt coefficients, E(3) equivariance, training, sampler."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke
+from repro.data import fanout_sample, make_csr, random_geometric_graph
+from repro.models.gnn import mace as M
+
+
+def _rand_rot(rng):
+    a = rng.normal(size=(3, 3))
+    q, _ = np.linalg.qr(a)
+    if np.linalg.det(q) < 0:
+        q[:, 0] *= -1
+    return q.astype(np.float32)
+
+
+def test_gaunt_orthonormality():
+    g = M.gaunt_coefficients()
+    # G[0ab] = Y00 * <Y_a, Y_b> = delta_ab / (2 sqrt(pi))
+    np.testing.assert_allclose(g[0], 0.28209479177387814 * np.eye(9),
+                               atol=1e-10)
+
+
+def test_gaunt_total_symmetry():
+    g = M.gaunt_coefficients()
+    for perm in [(1, 0, 2), (2, 1, 0), (0, 2, 1), (1, 2, 0), (2, 0, 1)]:
+        np.testing.assert_allclose(g, np.transpose(g, perm), atol=1e-12)
+
+
+def test_gaunt_selection_rules():
+    """G vanishes when l1+l2+l3 is odd (parity selection rule)."""
+    g = M.gaunt_coefficients()
+    l_of = M.L_OF_IDX
+    for a in range(9):
+        for b in range(9):
+            for c in range(9):
+                if (l_of[a] + l_of[b] + l_of[c]) % 2 == 1:
+                    assert abs(g[a, b, c]) < 1e-12
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_sph_inner_products_rotation_invariant(seed):
+    rng = np.random.default_rng(seed)
+    r = _rand_rot(rng)
+    u = rng.normal(size=(6, 3))
+    u /= np.linalg.norm(u, axis=1, keepdims=True)
+    v = rng.normal(size=(6, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    yu = np.asarray(M.real_sph_l2(jnp.asarray(u)))
+    yv = np.asarray(M.real_sph_l2(jnp.asarray(v)))
+    yur = np.asarray(M.real_sph_l2(jnp.asarray(u @ r.T)))
+    yvr = np.asarray(M.real_sph_l2(jnp.asarray(v @ r.T)))
+    for sl in M.SLICES.values():
+        d0 = (yu[:, sl] * yv[:, sl]).sum(1)
+        d1 = (yur[:, sl] * yvr[:, sl]).sum(1)
+        np.testing.assert_allclose(d0, d1, atol=1e-5)
+
+
+def _small_graph(rng, n=24, e=80, f=4):
+    pos = rng.normal(size=(n, 3)).astype(np.float32)
+    feat = rng.normal(size=(n, f)).astype(np.float32)
+    snd = rng.integers(0, n, e).astype(np.int32)
+    rcv = rng.integers(0, n, e).astype(np.int32)
+    return pos, feat, snd, rcv
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_model_outputs_e3_invariant(seed):
+    """Energies/logits invariant under global rotation + translation."""
+    rng = np.random.default_rng(seed)
+    cfg = get_smoke("mace")
+    pos, feat, snd, rcv = _small_graph(rng)
+    params = M.init_mace(jax.random.PRNGKey(seed % 997), cfg, 4, 8)
+    o1 = M.mace_forward(params, cfg, jnp.asarray(feat), jnp.asarray(pos),
+                        jnp.asarray(snd), jnp.asarray(rcv))
+    r, t = _rand_rot(rng), rng.normal(size=(1, 3)).astype(np.float32)
+    o2 = M.mace_forward(params, cfg, jnp.asarray(feat),
+                        jnp.asarray(pos @ r.T + t),
+                        jnp.asarray(snd), jnp.asarray(rcv))
+    np.testing.assert_allclose(float(o1["energy"]), float(o2["energy"]),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(o1["logits"]),
+                               np.asarray(o2["logits"]),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_l1_features_rotate_as_vectors(rng):
+    """Equivariance of the l=1 block: h1(Rx) = D1(R) h1(x)."""
+    cfg = get_smoke("mace")
+    pos, feat, snd, rcv = _small_graph(rng)
+    params = M.init_mace(jax.random.PRNGKey(0), cfg, 4, 8)
+    r = _rand_rot(rng)
+    o1 = M.mace_forward(params, cfg, jnp.asarray(feat), jnp.asarray(pos),
+                        jnp.asarray(snd), jnp.asarray(rcv))
+    o2 = M.mace_forward(params, cfg, jnp.asarray(feat),
+                        jnp.asarray(pos @ r.T),
+                        jnp.asarray(snd), jnp.asarray(rcv))
+    # l=1 real SH use (y, z, x): D1 = P R P^T with P = perm(x,y,z)->(y,z,x)
+    perm = np.asarray([[0, 1, 0], [0, 0, 1], [1, 0, 0]], np.float32)
+    d1 = perm @ r @ perm.T
+    h1 = np.asarray(o1["node_repr"][:, :, 1:4])
+    h2 = np.asarray(o2["node_repr"][:, :, 1:4])
+    np.testing.assert_allclose(h2, np.einsum("ij,ncj->nci", d1, h1),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_edge_mask_zeroes_messages(rng):
+    cfg = get_smoke("mace")
+    pos, feat, snd, rcv = _small_graph(rng)
+    params = M.init_mace(jax.random.PRNGKey(1), cfg, 4, 8)
+    o_all = M.mace_forward(params, cfg, jnp.asarray(feat),
+                           jnp.asarray(pos), jnp.asarray(snd),
+                           jnp.asarray(rcv),
+                           edge_mask=jnp.zeros(len(snd)))
+    # zero edges == no aggregation: node repr from self-connections only
+    o_few = M.mace_forward(params, cfg, jnp.asarray(feat),
+                           jnp.asarray(pos), jnp.asarray(snd[:1]),
+                           jnp.asarray(rcv[:1]),
+                           edge_mask=jnp.zeros(1))
+    np.testing.assert_allclose(np.asarray(o_all["logits"]),
+                               np.asarray(o_few["logits"]), rtol=1e-5)
+
+
+def test_scan_vs_unroll_consistency(rng):
+    import dataclasses
+    cfg = get_smoke("mace")
+    pos, feat, snd, rcv = _small_graph(rng)
+    params = M.init_mace(jax.random.PRNGKey(2), cfg, 4, 8)
+    o1 = M.mace_forward(params, cfg, jnp.asarray(feat), jnp.asarray(pos),
+                        jnp.asarray(snd), jnp.asarray(rcv))
+    cfg_u = dataclasses.replace(cfg, scan_layers=False)
+    o2 = M.mace_forward(params, cfg_u, jnp.asarray(feat),
+                        jnp.asarray(pos), jnp.asarray(snd),
+                        jnp.asarray(rcv))
+    np.testing.assert_allclose(np.asarray(o1["logits"]),
+                               np.asarray(o2["logits"]), rtol=1e-5)
+
+
+def test_training_reduces_loss(rng):
+    cfg = get_smoke("mace")
+    g = random_geometric_graph(rng, 64, 6, 8, cfg.n_classes)
+    batch = {k: jnp.asarray(v) for k, v in g.items()}
+    params = M.init_mace(jax.random.PRNGKey(3), cfg, 8, cfg.n_classes)
+    from repro.optim import adamw
+    opt = adamw(3e-3)
+    st = opt.init(params)
+    losses = []
+    for step in range(15):
+        (l, _), grads = jax.value_and_grad(
+            lambda p: M.node_class_loss(p, cfg, batch),
+            has_aux=True)(params)
+        params, st = opt.update(grads, st, params, jnp.asarray(step))
+        losses.append(float(l))
+    assert losses[-1] < losses[0]
+
+
+def test_fanout_sampler_fixed_shapes(rng):
+    g = random_geometric_graph(rng, 300, 8, 16, 5)
+    indptr, indices = make_csr(300, g["senders"], g["receivers"])
+    seeds = rng.choice(300, 16, replace=False)
+    sub = fanout_sample(rng, indptr, indices, seeds, (5, 3))
+    assert sub["node_ids"].shape == (16 + 80 + 240,)
+    assert sub["senders"].shape == (80 + 240,)
+    # edges reference valid in-subgraph positions
+    assert sub["senders"].max() < len(sub["node_ids"])
+    assert sub["receivers"].max() < 16 + 80

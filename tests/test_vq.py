@@ -1,0 +1,110 @@
+"""Streaming-VQ core semantics: Eq. 2-3, 7-10, 12-13."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import vq
+
+
+def _mk_state(key, k=32, d=8):
+    return vq.init_vq(key, k, d)
+
+
+def test_assign_matches_bruteforce(rng):
+    state = _mk_state(jax.random.PRNGKey(0), 64, 16)
+    v = jnp.asarray(rng.normal(size=(100, 16)).astype(np.float32))
+    a = np.asarray(vq.assign(state, v, s=5.0))
+    e = np.asarray(state.embeddings())
+    r = np.asarray(vq.disturbance(state.c, 5.0))
+    d2 = ((v[:, None] - e[None]) ** 2).sum(-1)
+    expect = np.argmin(np.maximum(np.asarray(d2), 0) * r[None], axis=1)
+    np.testing.assert_array_equal(a, expect)
+
+
+def test_disturbance_boosts_cold_clusters():
+    """Eq. 10: clusters with < 1/s of mean count get distance discounts."""
+    c = jnp.asarray([100.0, 100.0, 1.0, 100.0])
+    r = np.asarray(vq.disturbance(c, s=5.0))
+    assert r[2] < 1.0 and np.all(r[[0, 1, 3]] == 1.0)
+
+
+def test_disturbance_changes_assignment():
+    # two clusters, item equidistant-ish but cold cluster gets boosted
+    state = vq.VQState(w=jnp.asarray([[1.0, 0.0], [0.9, 0.0]]),
+                       c=jnp.asarray([1.0, 1.0]))
+    v = jnp.asarray([[1.0, 0.0]])
+    assert int(vq.assign(state, v)[0]) == 0
+    # make cluster 1 ice-cold: it should now win despite larger distance
+    state_cold = vq.VQState(w=state.w * jnp.asarray([[1.0], [0.001]]),
+                            c=jnp.asarray([1000.0, 0.001]))
+    a = int(vq.assign(state_cold, v, s=5.0)[0])
+    assert a == 1
+
+
+def test_ema_update_math():
+    state = vq.VQState(w=jnp.ones((2, 2)), c=jnp.ones((2,)))
+    v = jnp.asarray([[2.0, 0.0], [4.0, 0.0]])
+    assign = jnp.asarray([0, 0], jnp.int32)
+    w = jnp.asarray([1.0, 1.0])
+    new = vq.ema_update(state, v, assign, w, alpha=0.5)
+    # w0 <- .5*1 + .5*(2+4) = 3.5 ; c0 <- .5*1 + .5*2 = 1.5
+    np.testing.assert_allclose(np.asarray(new.w[0]), [3.5, 0.5])
+    np.testing.assert_allclose(np.asarray(new.c), [1.5, 0.5])
+    # Eq. 9 serving embedding
+    np.testing.assert_allclose(np.asarray(new.embeddings()[0]),
+                               [3.5 / 1.5, 0.5 / 1.5], rtol=1e-6)
+
+
+def test_popularity_weight_multitask():
+    delta = jnp.asarray([4.0, 1.0])
+    rewards = jnp.asarray([[1.0, 0.0], [0.0, 3.0]])
+    w = vq.popularity_weight(delta, beta=0.5, rewards=rewards,
+                             eta=(1.0, 1.0))
+    # (4^.5)*(1+1)^1*(1+0)^1 = 4 ; (1^.5)*(1)*(4) = 4
+    np.testing.assert_allclose(np.asarray(w), [4.0, 4.0], rtol=1e-6)
+
+
+def test_quantize_straight_through():
+    state = _mk_state(jax.random.PRNGKey(1), 8, 4)
+    v = jnp.ones((3, 4))
+    a = vq.assign(state, v)
+
+    def f(v):
+        return jnp.sum(vq.quantize(state, v, a) ** 2)
+
+    g = jax.grad(f)(v)
+    # forward value equals cluster embedding; grad flows to v as identity
+    e = state.embeddings()[a]
+    np.testing.assert_allclose(np.asarray(vq.quantize(state, v, a)),
+                               np.asarray(e), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(2 * e), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 64), st.integers(1, 128), st.integers(0, 2 ** 31 - 1))
+def test_assign_in_range(k, b, seed):
+    key = jax.random.PRNGKey(seed % 1000)
+    state = _mk_state(key, k, 4)
+    v = jax.random.normal(jax.random.PRNGKey(seed % 997), (b, 4))
+    a = np.asarray(vq.assign(state, v))
+    assert a.shape == (b,) and (a >= 0).all() and (a < k).all()
+
+
+def test_streaming_balance_property(rng):
+    """Training on clustered data spreads load over many clusters."""
+    k, d, steps = 64, 8, 60
+    state = _mk_state(jax.random.PRNGKey(2), k, d)
+    centers = rng.normal(size=(8, d)).astype(np.float32)
+    for t in range(steps):
+        idx = rng.integers(0, 8, 256)
+        v = jnp.asarray(centers[idx]
+                        + rng.normal(size=(256, d)).astype(np.float32) * .2)
+        a = vq.assign(state, v)
+        w = jnp.ones((256,))
+        state = vq.ema_update(state, v, a, w, alpha=0.95)
+    stats = vq.cluster_usage_stats(state, a)
+    # balanced: a healthy fraction of clusters used, no mega-cluster
+    assert float(stats["used_clusters"]) >= 8
+    assert float(stats["max_cluster"]) <= 256 * 0.6
