@@ -1,0 +1,11 @@
+# Repo entry points (tier-1 verify + benchmarks).
+.PHONY: test test-fast bench
+
+test:           ## full tier-1 suite (what CI runs)
+	./scripts/test.sh
+
+test-fast:      ## tier-1 minus tests marked slow
+	./scripts/test.sh -m 'not slow'
+
+bench:          ## paper-table benchmark harness
+	PYTHONPATH=src python -m benchmarks.run

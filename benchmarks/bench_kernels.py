@@ -47,6 +47,34 @@ def run() -> list:
     rows.append(("kernels/inbatch_softmax_ref_us", round(us, 1),
                  f"B={bsz} (L_aux hot path)"))
 
+    # serving indexing step: blocked cluster ranking (Eq. 5/11)
+    bq, k = 256, 16384
+    uq = jnp.asarray(rng.normal(size=(bq, d)).astype(np.float32))
+    ek = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    us, _ = timed(jax.jit(lambda a, b: ref.cluster_rank_ref(a, b, 128)),
+                  uq, ek, n=3)
+    rows.append(("kernels/cluster_rank_ref_us", round(us, 1),
+                 f"B={bq} K={k} top128"))
+    vk, ik = ops.cluster_rank(uq[:16], ek, 128)
+    vr, ir = ref.cluster_rank_ref(uq[:16], ek, 128)
+    ok = bool(jnp.all(vk == vr) & jnp.all(ik == ir))
+    rows.append(("kernels/cluster_rank_pallas_match", None, ok))
+
+    # serving merge step: Alg. 1 fused kernel vs vmapped lax.scan ref
+    bm, c, l, tgt = 4, 64, 128, 256
+    mcs = jnp.asarray(rng.normal(size=(bm, c)).astype(np.float32))
+    mbl = jnp.asarray(-np.sort(
+        -rng.normal(size=(bm, c, l)).astype(np.float32), axis=-1))
+    mln = jnp.asarray(rng.integers(0, l + 1, (bm, c)).astype(np.int32))
+    us, (pos_r, sc_r) = timed(
+        jax.jit(lambda a, b, cc: ref.merge_serve_ref(a, b, cc, 8, tgt)),
+        mcs, mbl, mln, n=3)
+    rows.append(("kernels/merge_serve_ref_us", round(us, 1),
+                 f"B={bm} C={c} L={l} S={tgt} (lax.scan fallback)"))
+    pos_p, sc_p = ops.merge_serve(mcs, mbl, mln, 8, tgt)
+    ok = bool(jnp.all(pos_p == pos_r) & jnp.all(sc_p == sc_r))
+    rows.append(("kernels/merge_serve_pallas_match", None, ok))
+
     table = jnp.asarray(rng.normal(size=(100_000, 64)).astype(np.float32))
     ids = jnp.asarray(rng.integers(0, 100_000, (4096, 20))
                       .astype(np.int32))

@@ -2,10 +2,16 @@
 
 Chunk-size sweep (1/4/8/16): larger chunks cut pops (cost) at a small
 quality loss ('we can stand some mistakes'), exactly Fig. 2's trade-off.
-Also times the heap oracle vs the TPU-form lax.scan implementation.
+Compares THREE implementations of Alg. 1 — python heap oracle, the
+lax.scan TPU form, and the fused Pallas merge_serve kernel (interpret
+mode off TPU, so its wall-time here measures the interpreter, not the
+kernel; parity is the point) — and records the comparison in
+``BENCH_merge_serve.json`` at the repo root.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -14,8 +20,12 @@ import numpy as np
 
 from benchmarks.common import timed
 from repro.core import merge_sort
+from repro.kernels import ops
 
 C, L, TARGET = 64, 256, 512
+B = 8                                  # batched comparison width
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_merge_serve.json")
 
 
 def run() -> list:
@@ -27,6 +37,8 @@ def run() -> list:
     pos_exact, _ = merge_sort.full_sort_topk(jcs, jbl, jln, TARGET)
     want = set(np.asarray(pos_exact)[np.asarray(pos_exact) >= 0].tolist())
     rows = []
+    record = {"shape": dict(C=C, L=L, target=TARGET, batch=B),
+              "backend": jax.default_backend(), "rows": {}}
     for chunk in (1, 4, 8, 16):
         fn = jax.jit(lambda a, b, c, ch=chunk: merge_sort.merge_sort_serve(
             a, b, c, ch, TARGET))
@@ -35,15 +47,49 @@ def run() -> list:
         overlap = len(got & want) / max(len(want), 1)
         rows.append((f"merge_sort/chunk{chunk}_us", round(us, 1),
                      f"overlap_vs_exact={overlap:.4f}"))
+        record["rows"][f"lax_scan_chunk{chunk}_us"] = round(us, 1)
+        record["rows"][f"lax_scan_chunk{chunk}_overlap"] = round(overlap,
+                                                                 4)
     # heap oracle (python) timing for context
     t0 = time.perf_counter()
     merge_sort.merge_sort_serve_np(cs, bl, ln, 8, TARGET)
-    rows.append(("merge_sort/python_heap_us",
-                 round((time.perf_counter() - t0) * 1e6, 1),
+    heap_us = round((time.perf_counter() - t0) * 1e6, 1)
+    rows.append(("merge_sort/python_heap_us", heap_us,
                  "faithful Alg. 1 reference"))
+    record["rows"]["python_heap_us"] = heap_us
     us_full, _ = timed(jax.jit(
         lambda a, b, c: merge_sort.full_sort_topk(a, b, c, TARGET)),
         jcs, jbl, jln, n=5)
     rows.append(("merge_sort/full_sort_us", round(us_full, 1),
                  "exact top-k over all pairs"))
+    record["rows"]["full_sort_us"] = round(us_full, 1)
+
+    # ---- batched lax-scan vs Pallas kernel (chunk=8) -------------------
+    bcs = jnp.asarray(rng.normal(size=(B, C)).astype(np.float32))
+    bbl = jnp.asarray(-np.sort(
+        -rng.normal(size=(B, C, L)).astype(np.float32), axis=-1))
+    bln = jnp.asarray(rng.integers(L // 2, L + 1, (B, C))
+                      .astype(np.int32))
+    scan_fn = jax.jit(jax.vmap(
+        lambda a, b, c: merge_sort.merge_sort_serve(a, b, c, 8, TARGET)))
+    us_scan, (pos_s, sc_s) = timed(scan_fn, bcs, bbl, bln, n=3)
+    rows.append((f"merge_sort/lax_scan_B{B}_us", round(us_scan, 1),
+                 "vmapped scan, chunk=8"))
+    record["rows"][f"lax_scan_B{B}_us"] = round(us_scan, 1)
+    us_pal, (pos_p, sc_p) = timed(
+        lambda a, b, c: ops.merge_serve(a, b, c, 8, TARGET),
+        bcs, bbl, bln, n=3)
+    parity = bool(jnp.all(pos_s == pos_p) and jnp.all(sc_s == sc_p))
+    on_tpu = jax.default_backend() == "tpu"
+    rows.append((f"merge_sort/pallas_B{B}_us", round(us_pal, 1),
+                 f"fused kernel ({'native' if on_tpu else 'interpret'}), "
+                 f"bit_parity={parity}"))
+    record["rows"][f"pallas_B{B}_us"] = round(us_pal, 1)
+    record["rows"]["pallas_interpret_mode"] = not on_tpu
+    record["rows"]["pallas_bit_parity_vs_lax_scan"] = parity
+    rows.append(("merge_sort/pallas_bit_parity", None, parity))
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
     return rows

@@ -91,11 +91,10 @@ def user_embeddings(tr: TrainedRetriever, user_ids: np.ndarray,
 def timed(fn, *args, n: int = 3, warmup: int = 1):
     for _ in range(warmup):
         out = fn(*args)
-    jax.block_until_ready(out) if hasattr(out, "block_until_ready") \
-        else None
+    # block on the whole pytree: tuple outputs (top_k, merge_serve, ...)
+    # have no .block_until_ready and would otherwise time async dispatch
+    jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(n):
-        out = fn(*args)
-        if hasattr(out, "block_until_ready"):
-            out.block_until_ready()
+        out = jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / n * 1e6, out   # us/call

@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 verify in one command: PYTHONPATH=src python -m pytest -x -q
+# Usage:
+#   scripts/test.sh            # full tier-1 suite
+#   scripts/test.sh -m 'not slow'   # skip long-running tests
+#   scripts/test.sh tests/test_merge_serve.py   # any pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -213,25 +213,56 @@ def train_step(params: Params, state: IndexState, cfg: SVQConfig,
 # Serving (indexing step -> merge sort -> ranking step)
 # ---------------------------------------------------------------------------
 
-def rank_clusters(state: IndexState, u: jax.Array, n: int
+def rank_clusters(state: IndexState, u: jax.Array, n: int,
+                  use_kernel: bool = False
                   ) -> Tuple[jax.Array, jax.Array]:
-    """Eq. 5/11 cluster ranking: top-n clusters by u.e_k (per query)."""
+    """Eq. 5/11 cluster ranking: top-n clusters by u.e_k (per query).
+
+    ``use_kernel=True`` routes through the blocked Pallas kernel
+    (online top-n over codebook blocks, no (B, K) matrix in HBM).
+    """
     e = state.vq.embeddings()
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.cluster_rank(u, e, n)
     scores = u @ e.T                               # (B, K)
     return jax.lax.top_k(scores, n)
 
 
+def serve_kernel(top_scores: jax.Array, bias: jax.Array,
+                 lengths: jax.Array, chunk: int, target: int,
+                 use_kernel: bool = False, exact: bool = True
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Single dispatch point for the batched Alg. 1 merge stage.
+
+    (B, C) cluster scores, (B, C, L) pre-sorted bias slabs, (B, C)
+    lengths -> ((B, target) flat positions, (B, target) merge scores).
+    ``use_kernel=True`` runs the fused Pallas kernel (interpret mode off
+    TPU); the fallback vmaps the lax.scan form.  Both are bit-identical
+    to the numpy heap oracle for ``exact=True``.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.merge_serve(top_scores, bias, lengths, chunk, target,
+                                exact)
+    from repro.kernels import ref as kref
+    return kref.merge_serve_ref(top_scores, bias, lengths, chunk, target,
+                                exact)
+
+
 def serve(params: Params, state: IndexState, cfg: SVQConfig,
           index: astore.ServingIndex, batch: Dict[str, jax.Array],
-          items_per_cluster: int = 256, task: int = 0
-          ) -> Dict[str, jax.Array]:
+          items_per_cluster: int = 256, task: int = 0,
+          use_kernel: bool = False) -> Dict[str, jax.Array]:
     """Full retrieval for a user batch -> final candidate ids + scores."""
     user_feat, hist_emb = user_features(params, batch["user_id"],
                                         batch["hist"])
     u = jax.vmap(lambda tw: mlp(tw, user_feat))(params["user_towers"])[task]
 
     # ---- indexing step: rank clusters, fetch pre-sorted segments -------
-    top_scores, top_clusters = rank_clusters(state, u, cfg.clusters_per_query)
+    top_scores, top_clusters = rank_clusters(state, u,
+                                             cfg.clusters_per_query,
+                                             use_kernel=use_kernel)
     starts = index.offsets[top_clusters]                     # (B, C)
     counts = index.offsets[top_clusters + 1] - starts
     L = items_per_cluster
@@ -242,9 +273,9 @@ def serve(params: Params, state: IndexState, cfg: SVQConfig,
 
     # ---- Alg. 1 merge sort over (cluster personality + item bias) ------
     S = cfg.candidates_out
-    pos, msort_scores = jax.vmap(
-        lambda cs, bl, ln: merge_sort.merge_sort_serve(
-            cs, bl, ln, cfg.chunk_size, S))(top_scores, bias, lengths)
+    pos, msort_scores = serve_kernel(top_scores, bias, lengths,
+                                     cfg.chunk_size, S,
+                                     use_kernel=use_kernel)
     valid = pos >= 0
     c_idx = jnp.clip(pos, 0) // L
     i_idx = jnp.clip(pos, 0) % L

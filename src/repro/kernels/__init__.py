@@ -6,6 +6,10 @@ inbatch_softmax  — fused L_aux/L_ind in-batch CE (online logsumexp,
                    (B,B) logits never hit HBM)
 topk_dot         — retrieval_cand: fused 1xD * Dx1M scoring + two-stage
                    top-k
+cluster_rank     — serving indexing step: blocked u.e_k scoring + online
+                   top-n over the codebook (Eq. 5/11)
+merge_serve      — serving Alg. 1: batched k-way chunked merge, head
+                   pointers in registers, one-pass top-S emission
 embedding_bag    — fused gather+reduce over HBM-resident tables (scalar-
                    prefetch indices + per-row DMA)
 flash_attention  — causal flash attention (LM train/prefill hot spot)

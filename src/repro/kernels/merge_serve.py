@@ -1,0 +1,221 @@
+"""Pallas TPU kernels for the fused serving path (§3.4, Alg. 1, Fig. 2).
+
+Two kernels cover the latency-critical indexing step of serving:
+
+cluster_rank — blocked cluster scoring + top-n over the codebook.  Eq. 5 /
+    Eq. 11 ranks clusters by ``u . e_k``; instead of materializing the
+    full (B, K) score matrix in HBM and running a global ``lax.top_k``,
+    the codebook is streamed through VMEM in K-blocks, each block's
+    local top-n is computed on-chip, and a running top-n carry in the
+    output refs merges blocks online (the hierarchical-top-k analog of
+    the flash-attention online softmax).  Bitwise equal to
+    ``lax.top_k(u @ e.T, n)`` for distinct scores; on exact ties both
+    prefer the lower cluster index.
+
+merge_serve — batched k-way chunked merge (Alg. 1).  One grid step per
+    query; the per-query head pointers live in registers as a
+    ``fori_loop`` carry (the SMEM-resident analog of Alg. 1's heap), and
+    the kernel emits top-S positions + combined scores in one pass with
+    no intermediate round-trip to HBM.  Block mapping to Alg. 1:
+
+      Alg. 1 line               kernel block
+      -----------------------   -------------------------------------
+      l1  heap <- cluster heads  ``head_b`` masked gather of
+                                 ``bias[c, ptr[c]]`` + ``head_s`` score
+      l2  pop max head           ``c = argmax(head_s)`` (first-max ==
+                                 heap's smallest-cluster tie-break)
+      l3  emit CHUNK items       masked row gather -> ``vals``; write
+                                 ``pos_ref/sc_ref[t*chunk : +chunk]``
+      l4  advance head pointer   ``ptr[c] += chunk`` (loop carry)
+      l5  re-push if non-empty   implicit: exhausted heads score NEG
+      stop at S items            ``n_out`` carry gates validity
+
+    ``exact=True`` budgets ceil(target/chunk) + C pops (identical to
+    ``core.merge_sort.merge_sort_serve``), guaranteeing heap-oracle-
+    identical output; the wrapper compacts the chunked emissions
+    forward (stable) exactly like the lax.scan reference.
+
+Per-cluster head/row gathers use iota-mask reductions rather than
+``dynamic_slice`` so the kernel lowers to pure VPU selects/adds — with
+C=128, L=256 f32 the whole per-query working set is ~128 KiB of VMEM.
+
+The pure-lax fallback (``kernels/ref.py: merge_serve_ref``) vmaps the
+``lax.scan`` implementation; ``core/retriever.serve_kernel`` is the
+single dispatch point that picks Pallas vs fallback via ``use_kernel``.
+
+NOTE: this container has no TPU, so both kernels are validated in
+interpret mode only (like the rest of kernels/).  Iotas are built
+rank-2 per Mosaic's requirement, but native lowering (esp. the 1-D
+block specs shared with vq_assign/topk_dot) must be confirmed on real
+hardware before enabling ``use_kernel`` in production — see ROADMAP.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# cluster_rank: blocked scoring + online top-n over the codebook
+# ---------------------------------------------------------------------------
+
+def _cluster_rank_kernel(u_ref, e_ref, mask_ref, val_ref, idx_ref,
+                         *, bk: int, n: int):
+    kt = pl.program_id(1)
+    u = u_ref[...].astype(jnp.float32)                   # (bB, d)
+    e = e_ref[...].astype(jnp.float32)                   # (bK, d)
+    scores = jax.lax.dot_general(
+        u, e, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (bB, bK) MXU
+    scores = scores + mask_ref[...][None, :]             # NEG on padded K
+    local_val, local_i = jax.lax.top_k(scores, n)
+    local_idx = (local_i + kt * bk).astype(jnp.int32)
+
+    @pl.when(kt == 0)
+    def _init():
+        val_ref[...] = local_val
+        idx_ref[...] = local_idx
+
+    @pl.when(kt > 0)
+    def _merge():
+        # carry first: on ties top_k keeps the earlier (lower-index) block
+        merged_val = jnp.concatenate([val_ref[...], local_val], axis=1)
+        merged_idx = jnp.concatenate([idx_ref[...], local_idx], axis=1)
+        best_val, pos = jax.lax.top_k(merged_val, n)
+        val_ref[...] = best_val
+        idx_ref[...] = jnp.take_along_axis(merged_idx, pos, axis=1)
+
+
+def cluster_rank_pallas(u: jax.Array, e: jax.Array, n: int,
+                        block_b: int = 128, block_k: int = 512,
+                        interpret: bool = True
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """u: (B, d), e: (K, d) -> (top-n scores (B, n), cluster ids (B, n))."""
+    b, d = u.shape
+    k = e.shape[0]
+    if n > k:
+        raise ValueError(f"top-n {n} exceeds codebook size {k}")
+    block_k = max(block_k, n)           # local top-n needs n <= block
+    pb = (-b) % block_b
+    pk = (-k) % block_k
+    if pb:
+        u = jnp.pad(u, ((0, pb), (0, 0)))
+    mask = jnp.zeros((k,), jnp.float32)
+    if pk:
+        e = jnp.pad(e, ((0, pk), (0, 0)))
+        mask = jnp.pad(mask, (0, pk), constant_values=NEG)
+    bp, kp = b + pb, k + pk
+
+    grid = (bp // block_b, kp // block_k)
+    vals, idxs = pl.pallas_call(
+        functools.partial(_cluster_rank_kernel, bk=block_k, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_k,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, n), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, n), jnp.float32),
+            jax.ShapeDtypeStruct((bp, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(u, e, mask)
+    return vals[:b], idxs[:b]
+
+
+# ---------------------------------------------------------------------------
+# merge_serve: batched Alg. 1 k-way chunked merge
+# ---------------------------------------------------------------------------
+
+def _merge_serve_kernel(cs_ref, bl_ref, ln_ref, pos_ref, sc_ref,
+                        *, c: int, l: int, chunk: int, target: int,
+                        n_steps: int):
+    cs = cs_ref[0, :].astype(jnp.float32)                # (C,)
+    bl = bl_ref[0, :, :].astype(jnp.float32)             # (C, L)
+    ln = ln_ref[0, :]                                    # (C,)
+    # Mosaic requires iota of rank >= 2: build 2-D, then squeeze
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (c, 1), 0)[:, 0]
+    iota_l = jax.lax.broadcasted_iota(jnp.int32, (1, l), 1)[0, :]
+    col = jax.lax.broadcasted_iota(jnp.int32, (c, l), 1)
+    arange_chunk = jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)[:, 0]
+
+    def step(t, carry):
+        ptr, n_out = carry
+        # Alg. 1 l1: current head of every cluster list (masked gather)
+        head_b = jnp.sum(jnp.where(col == ptr[:, None], bl, 0.0), axis=1)
+        head_s = jnp.where(ptr < ln, cs + head_b, NEG)   # exhausted -> NEG
+        # Alg. 1 l2: pop the max head (first-max == heap tie-break)
+        ci = jnp.argmax(head_s)
+        sel = iota_c == ci
+        base = jnp.sum(jnp.where(sel, ptr, 0))
+        len_c = jnp.sum(jnp.where(sel, ln, 0))
+        cs_c = jnp.sum(jnp.where(sel, cs, 0.0))
+        # Alg. 1 l3: emit a CHUNK of the popped cluster's items
+        row = jnp.sum(jnp.where(sel[:, None], bl, 0.0), axis=0)   # (L,)
+        idx = base + arange_chunk
+        vals = jnp.sum(jnp.where(idx[:, None] == iota_l[None, :],
+                                 row[None, :], 0.0), axis=1)
+        valid = ((idx < len_c) & (jnp.max(head_s) > NEG / 2)
+                 & (n_out < target))
+        pos_ref[0, pl.ds(t * chunk, chunk)] = jnp.where(
+            valid, ci * l + idx, -1).astype(jnp.int32)
+        sc_ref[0, pl.ds(t * chunk, chunk)] = jnp.where(
+            valid, cs_c + vals, NEG)
+        # Alg. 1 l4/l5: advance the popped head; re-push is implicit
+        return (jnp.where(sel, ptr + chunk, ptr),
+                n_out + jnp.sum(valid.astype(jnp.int32)))
+
+    ptr0 = jnp.zeros((c,), jnp.int32)
+    jax.lax.fori_loop(0, n_steps, step, (ptr0, jnp.int32(0)))
+
+
+def merge_serve_pallas(cluster_scores: jax.Array, bias_lists: jax.Array,
+                       lengths: jax.Array, chunk: int, target: int,
+                       exact: bool = True, interpret: bool = True
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Batched Alg. 1: (B,C), (B,C,L), (B,C) -> ((B,target) pos, scores).
+
+    Bit-identical to ``vmap(core.merge_sort.merge_sort_serve)`` (and, for
+    ``exact=True``, to the numpy heap oracle): same pop order, same
+    (-1, NEG) padding, same stable forward compaction.
+    """
+    bsz, c = cluster_scores.shape
+    l = bias_lists.shape[-1]
+    n_steps = -(-target // chunk) + (c if exact else 0)
+    width = n_steps * chunk
+
+    pos, sc = pl.pallas_call(
+        functools.partial(_merge_serve_kernel, c=c, l=l, chunk=chunk,
+                          target=target, n_steps=n_steps),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, c), lambda b: (b, 0)),
+            pl.BlockSpec((1, c, l), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, c), lambda b: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, width), lambda b: (b, 0)),
+            pl.BlockSpec((1, width), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, width), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, width), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cluster_scores, bias_lists, lengths.astype(jnp.int32))
+    # stable forward compaction, identical to the lax.scan reference
+    order = jnp.argsort(pos < 0, axis=-1, stable=True)
+    pos = jnp.take_along_axis(pos, order, axis=-1)[:, :target]
+    sc = jnp.take_along_axis(sc, order, axis=-1)[:, :target]
+    return pos, sc

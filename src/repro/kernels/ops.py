@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.inbatch_softmax import inbatch_softmax_pallas
+from repro.kernels.merge_serve import (cluster_rank_pallas,
+                                       merge_serve_pallas)
 from repro.kernels.topk_dot import topk_dot_pallas
 from repro.kernels.vq_assign import vq_assign_pallas
 
@@ -42,6 +44,23 @@ def topk_dot(u: jax.Array, items: jax.Array, bias: jax.Array, k: int,
              block_n: int = 4096) -> Tuple[jax.Array, jax.Array]:
     return topk_dot_pallas(u, items, bias, k, block_n,
                            interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("n", "block_b", "block_k"))
+def cluster_rank(u: jax.Array, e: jax.Array, n: int,
+                 block_b: int = 128, block_k: int = 512
+                 ) -> Tuple[jax.Array, jax.Array]:
+    return cluster_rank_pallas(u, e, n, block_b, block_k,
+                               interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("chunk", "target", "exact"))
+def merge_serve(cluster_scores: jax.Array, bias_lists: jax.Array,
+                lengths: jax.Array, chunk: int, target: int,
+                exact: bool = True) -> Tuple[jax.Array, jax.Array]:
+    return merge_serve_pallas(cluster_scores, bias_lists, lengths,
+                              chunk, target, exact,
+                              interpret=not _on_tpu())
 
 
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_kv"))

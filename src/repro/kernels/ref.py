@@ -47,6 +47,25 @@ def inbatch_softmax_ref(u: jax.Array, v: jax.Array, bias: jax.Array,
     return logz - jnp.diagonal(logits)
 
 
+def cluster_rank_ref(u: jax.Array, e: jax.Array, n: int
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Eq. 5/11 cluster ranking: top-n of u @ e.T per query row."""
+    scores = u.astype(jnp.float32) @ e.astype(jnp.float32).T
+    vals, idx = jax.lax.top_k(scores, n)
+    return vals, idx.astype(jnp.int32)
+
+
+def merge_serve_ref(cluster_scores: jax.Array, bias_lists: jax.Array,
+                    lengths: jax.Array, chunk: int, target: int,
+                    exact: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Batched Alg. 1 merge: vmapped lax.scan reference (the pure-lax
+    fallback `core/retriever.serve_kernel` dispatches to)."""
+    from repro.core import merge_sort   # lazy: avoid core <-> kernels cycle
+    return jax.vmap(lambda cs, bl, ln: merge_sort.merge_sort_serve(
+        cs, bl, ln, chunk, target, exact))(
+        cluster_scores, bias_lists, lengths)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         causal: bool = True) -> jax.Array:
     """q,k,v: (S,hd) single head. -> (S,hd)."""

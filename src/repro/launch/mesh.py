@@ -14,23 +14,28 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def make_mesh_auto(shape, axes):
+    """jax.make_mesh with Auto axis types on jax versions that have them
+    (jax.sharding.AxisType appeared after 0.4; older jax is Auto-only)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh_auto(shape, axes)
 
 
 def make_debug_mesh(n_devices: int | None = None):
     """Tiny mesh over whatever devices exist (tests)."""
     n = n_devices or len(jax.devices())
     if n >= 4:
-        return jax.make_mesh((n // 2, 2), ("data", "model"),
-                             axis_types=_auto(2))
-    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))
+        return make_mesh_auto((n // 2, 2), ("data", "model"))
+    return make_mesh_auto((n, 1), ("data", "model"))
 
 
 def mesh_axes(mesh) -> tuple:

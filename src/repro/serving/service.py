@@ -43,9 +43,10 @@ class ServeStats:
 
 class RetrievalService:
     def __init__(self, cfg: SVQConfig, params, index_state,
-                 items_per_cluster: int = 256):
+                 items_per_cluster: int = 256, use_kernel: bool = False):
         self.cfg = cfg
         self.items_per_cluster = items_per_cluster
+        self.use_kernel = use_kernel
         self.stats = ServeStats()
         self._lock = threading.Lock()
         self._params = params
@@ -53,10 +54,13 @@ class RetrievalService:
         self._serving_index = astore.build_serving_index(
             index_state.store, cfg.n_clusters)
         self.stats.index_rebuilds += 1
+        # single dispatch: the fused Pallas path and the lax fallback go
+        # through the same retriever.serve_kernel switch
         self._serve_jit = jax.jit(
             lambda p, s, idx, b: retriever.serve(
                 p, s, cfg, idx, b,
-                items_per_cluster=items_per_cluster))
+                items_per_cluster=items_per_cluster,
+                use_kernel=use_kernel))
 
     # -- training-side hooks -------------------------------------------------
     def swap_model(self, params, index_state) -> None:
@@ -87,9 +91,11 @@ class RetrievalService:
                               {k: jnp.asarray(v) for k, v in batch.items()})
         out = {k: np.asarray(v) for k, v in out.items()}
         dt = time.perf_counter() - t0
-        self.stats.n_batches += 1
-        self.stats.n_requests += len(batch["user_id"])
-        self.stats.total_latency_s += dt
+        # counters mutate under the lock so concurrent callers stay exact
+        with self._lock:
+            self.stats.n_batches += 1
+            self.stats.n_requests += len(batch["user_id"])
+            self.stats.total_latency_s += dt
         return out
 
 

@@ -9,6 +9,18 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test (deselect with `-m 'not slow'`)")
+
+
 @pytest.fixture
-def rng():
-    return np.random.default_rng(0)
+def seed():
+    """Canonical scalar seed; override per-test to reseed ``rng``."""
+    return 0
+
+
+@pytest.fixture
+def rng(seed):
+    return np.random.default_rng(seed)

@@ -29,12 +29,13 @@ def _run(code: str):
     return out.stdout
 
 
+@pytest.mark.slow
 def test_shard_map_moe_matches_gspmd_on_mesh():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.models.lm import moe
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_auto
+    mesh = make_mesh_auto((2, 4), ("data", "model"))
     rng = np.random.default_rng(0)
     g, t, d, e, k, cap = 4, 16, 8, 8, 2, 16
     x = jnp.asarray(rng.normal(size=(g, t, d)).astype(np.float32))
@@ -52,14 +53,15 @@ def test_shard_map_moe_matches_gspmd_on_mesh():
     """)
 
 
+@pytest.mark.slow
 def test_sharded_lm_train_step_executes():
     _run("""
     import jax, jax.numpy as jnp, numpy as np, dataclasses
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.configs import get_smoke
     from repro.models.lm import transformer as tfm
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_auto
+    mesh = make_mesh_auto((2, 4), ("data", "model"))
     cfg = dataclasses.replace(get_smoke("granite-moe-1b-a400m"),
                               d_model=64, n_heads=8, n_kv_heads=2)
     sh = tfm.LMSharding(batch_axes=("data",), seq_shard=True)
@@ -80,13 +82,14 @@ def test_sharded_lm_train_step_executes():
     """)
 
 
+@pytest.mark.slow
 def test_sharded_svq_train_step_executes():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.configs import get_smoke
     from repro.core import retriever
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_auto
+    mesh = make_mesh_auto((2, 4), ("data", "model"))
     cfg = get_smoke("svq")
     params, state = retriever.init(jax.random.PRNGKey(0), cfg)
     B = 32

@@ -87,6 +87,114 @@ def test_flash_attention_sweep(rng, s, hd, bq, bkv, causal):
                                rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.parametrize("b,c,l,chunk,target", [
+    (3, 6, 10, 4, 25), (2, 13, 17, 3, 70), (1, 5, 3, 8, 9),
+])
+def test_merge_serve_sweep(rng, b, c, l, chunk, target):
+    cs = jnp.asarray(rng.normal(size=(b, c)).astype(np.float32))
+    bl = jnp.asarray(-np.sort(
+        -rng.normal(size=(b, c, l)).astype(np.float32), axis=-1))
+    ln = jnp.asarray(rng.integers(0, l + 1, size=(b, c)).astype(np.int32))
+    pos_k, sc_k = ops.merge_serve(cs, bl, ln, chunk, target)
+    pos_r, sc_r = ref.merge_serve_ref(cs, bl, ln, chunk, target)
+    np.testing.assert_array_equal(np.asarray(pos_k), np.asarray(pos_r))
+    np.testing.assert_array_equal(np.asarray(sc_k), np.asarray(sc_r))
+
+
+@pytest.mark.parametrize("b,k,d,n,bb,bk", [
+    (7, 100, 24, 10, 4, 32), (16, 512, 32, 64, 8, 128),
+])
+def test_cluster_rank_sweep(rng, b, k, d, n, bb, bk):
+    u = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    e = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    vk, ik = ops.cluster_rank(u, e, n, block_b=bb, block_k=bk)
+    vr, ir = ref.cluster_rank_ref(u, e, n)
+    np.testing.assert_array_equal(np.asarray(vk), np.asarray(vr))
+    np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
+
+
+# ---------------------------------------------------------------------------
+# dtype sweep: every kernel vs its oracle at f32/bf16, non-pow2 shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_topk_dot_dtypes(rng, dtype):
+    u = jnp.asarray(rng.normal(size=(24,))).astype(dtype)
+    items = jnp.asarray(rng.normal(size=(777, 24))).astype(dtype)
+    bias = jnp.asarray(rng.normal(size=(777,))).astype(dtype)
+    vk, ik = ops.topk_dot(u, items, bias, 11, block_n=128)
+    vr, ir = ref.topk_dot_ref(u, items, bias, 11)
+    # both paths upcast to f32 internally -> identical scores/indices
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vr), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag_dtypes(rng, dtype):
+    table = jnp.asarray(rng.normal(size=(123, 12))).astype(dtype)
+    ids = jnp.asarray(rng.integers(0, 123, (9, 5)).astype(np.int32))
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    for combiner in ("sum", "mean"):
+        got = ops.embedding_bag(table, ids, combiner, block_b=4)
+        want = ref.embedding_bag_ref(table.astype(jnp.float32), ids,
+                                     combiner)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_inbatch_softmax_dtypes(rng, dtype):
+    b, d = 45, 20                     # non-divisible by blocks
+    u = jnp.asarray(rng.normal(size=(b, d))).astype(dtype)
+    v = jnp.asarray(rng.normal(size=(b, d))).astype(dtype)
+    bias = jnp.asarray(rng.normal(size=(b,)).astype(np.float32))
+    got = ops.inbatch_softmax(u, v, bias, None, block_b=16, block_c=16)
+    want = ref.inbatch_softmax_ref(u, v, bias, None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(rng, dtype):
+    s, hd = 48, 20                    # non-pow2 head dim
+    q = jnp.asarray(rng.normal(size=(s, hd))).astype(dtype)
+    k = jnp.asarray(rng.normal(size=(s, hd))).astype(dtype)
+    v = jnp.asarray(rng.normal(size=(s, hd))).astype(dtype)
+    got = ops.flash_attention(q, k, v, True, 16, 16)
+    want = ref.flash_attention_ref(q, k, v, True)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got).astype(np.float32),
+                               np.asarray(want).astype(np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_merge_serve_dtypes(rng, dtype):
+    b, c, l, chunk, target = 3, 7, 11, 4, 20
+    cs = jnp.asarray(rng.normal(size=(b, c))).astype(dtype)
+    bl = jnp.asarray(-np.sort(
+        -rng.normal(size=(b, c, l)).astype(np.float32), axis=-1)
+    ).astype(dtype)
+    ln = jnp.asarray(rng.integers(0, l + 1, size=(b, c)).astype(np.int32))
+    pos_k, sc_k = ops.merge_serve(cs, bl, ln, chunk, target)
+    # the kernel upcasts on load, so the oracle sees f32-cast inputs
+    pos_r, sc_r = ref.merge_serve_ref(cs.astype(jnp.float32),
+                                      bl.astype(jnp.float32),
+                                      ln, chunk, target)
+    np.testing.assert_array_equal(np.asarray(pos_k), np.asarray(pos_r))
+    np.testing.assert_array_equal(np.asarray(sc_k), np.asarray(sc_r))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cluster_rank_dtypes(rng, dtype):
+    u = jnp.asarray(rng.normal(size=(9, 20))).astype(dtype)
+    e = jnp.asarray(rng.normal(size=(130, 20))).astype(dtype)
+    vk, ik = ops.cluster_rank(u, e, 7, block_b=4, block_k=64)
+    vr, ir = ref.cluster_rank_ref(u, e, 7)
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vr), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
+
+
 def test_kernel_integration_with_vq_module(rng):
     """vq.assign(use_kernel=True) routes through the Pallas kernel."""
     from repro.core import vq

@@ -1,7 +1,7 @@
 """Alg. 1 k-way chunked merge sort: TPU scan form vs heap oracle."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core import merge_sort
 

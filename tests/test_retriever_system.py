@@ -30,15 +30,18 @@ def _stream(cfg, **kw):
 def test_train_step_improves_loss_and_writes_index():
     cfg = _cfg()
     stream = _stream(cfg)
-    params, index, res = train_svq(cfg, stream, n_steps=30, batch=128)
-    losses = [m["loss"] for m in res.metrics]
-    assert losses[-1] < losses[0]
+    params, index, res = train_svq(cfg, stream, n_steps=60, batch=128)
+    losses = [float(m["loss"]) for m in res.metrics]
+    # single-step losses are batch-noisy; compare window means
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]), \
+        (losses[:5], losses[-5:])
     # index immediacy: assignments exist for trained items without any
     # offline build step
     occupied = int(np.asarray(index.store.cluster >= 0).sum())
     assert occupied > 100
 
 
+@pytest.mark.slow
 def test_index_balance_under_zipf():
     """Fig. 4: despite Zipf popularity, clusters stay balanced."""
     cfg = _cfg()
@@ -53,6 +56,7 @@ def test_index_balance_under_zipf():
     assert (counts > 0).sum() >= cfg.n_clusters * 0.3
 
 
+@pytest.mark.slow
 def test_serve_end_to_end_recall_near_bruteforce():
     """The VQ index recovers most of the trained model's own ceiling."""
     from repro.baselines import mips_topk, recall_at_k
@@ -103,6 +107,7 @@ def test_candidate_stream_assigns_unimpressed_items():
     assert int((np.asarray(got) >= 0).sum()) == 256
 
 
+@pytest.mark.slow
 def test_reparability_drift_l_aux_vs_l_sim():
     """§3.2: under drift, L_sim locks items; L_aux keeps repairing.
 

@@ -1,0 +1,152 @@
+"""RetrievalService under concurrent serve / swap / rebuild traffic.
+
+Torn-read detector with teeth on BOTH consistency axes:
+
+* params/index_state pair (swap_model atomicity): each version's user
+  towers are zeroed with a final-layer bias of ``sign``·1 (so u =
+  sign·1), and its codebook is ``sign``·(M/d)·1 (so every cluster
+  score is sign_params · sign_state · M).  A consistent pair always
+  scores +M; a torn (params, index_state) read scores -M.  M = 1e4
+  dwarfs every other term, so one negative merge score convicts.
+
+* serving index (snapshot atomicity): the two versions' indexes hold
+  DISJOINT item-id populations at opposite-sign popularity bias
+  (±1000), so within one response the sign of (merge_score - M) names
+  the index version and every served id must belong to that version's
+  id set.  A non-atomic snapshot could interleave versions inside one
+  response.
+
+ServeStats exactness: counters are mutated under the service lock, so
+after the threads join every count must be exact, not approximate.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import assignment_store as astore
+from repro.core import retriever
+from repro.serving import RetrievalService
+
+N_PER_VERSION = 200
+BIAS = 1000.0          # index-version tag (popularity bias)
+M = 1e4                # params/state-pair tag (cluster score magnitude)
+
+
+def _cfg():
+    return get_smoke("svq").with_(
+        n_clusters=8, n_items=512, n_users=64, embed_dim=8,
+        clusters_per_query=4, candidates_out=16, chunk_size=4)
+
+
+def _tag_params(params, sign):
+    """Zero the user towers except a final-layer bias of sign*1, so the
+    indexing-step user embedding is exactly sign*ones for every user."""
+    ut = jax.tree_util.tree_map(jnp.zeros_like, params["user_towers"])
+    ut["layers"][-1]["b"] = ut["layers"][-1]["b"] + sign
+    return {**params, "user_towers": ut}
+
+
+def _version(cfg, rng, ids, sign):
+    """IndexState holding exactly ``ids`` at bias sign*BIAS, with a
+    constant codebook of sign*(M/d) so u.e_k = sign_p*sign_s*M."""
+    _, state = retriever.init(jax.random.PRNGKey(0), cfg)
+    vq_tagged = state.vq._replace(
+        w=jnp.full_like(state.vq.w, sign * M / cfg.embed_dim),
+        c=jnp.ones_like(state.vq.c))
+    emb = jnp.asarray(
+        rng.normal(size=(len(ids), cfg.embed_dim)).astype(np.float32))
+    cluster = jnp.asarray(
+        rng.integers(0, cfg.n_clusters, len(ids)).astype(np.int32))
+    store = astore.write(state.store, jnp.asarray(ids, jnp.int32),
+                         cluster, emb,
+                         jnp.full((len(ids),), sign * BIAS, jnp.float32))
+    return state._replace(vq=vq_tagged, store=store)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_concurrent_serve_swap_rebuild(use_kernel):
+    cfg = _cfg()
+    rng = np.random.default_rng(7)
+    params, _ = retriever.init(jax.random.PRNGKey(1), cfg)
+    ids_v1 = np.arange(1, 1 + N_PER_VERSION)
+    ids_v2 = np.arange(10001, 10001 + N_PER_VERSION)
+    params_v1 = _tag_params(params, +1.0)
+    params_v2 = _tag_params(params, -1.0)
+    state_v1 = _version(cfg, rng, ids_v1, +1.0)
+    state_v2 = _version(cfg, rng, ids_v2, -1.0)
+    id_sets = {+1: set(ids_v1.tolist()), -1: set(ids_v2.tolist())}
+
+    svc = RetrievalService(cfg, params_v1, state_v1,
+                           use_kernel=use_kernel)
+    batch = dict(user_id=np.arange(4, dtype=np.int32),
+                 hist=np.zeros((4, cfg.user_hist_len), np.int32))
+    svc.serve_batch(batch)          # compile before the threads race
+
+    NEG = -1e30
+    n_serve_threads, n_serves = 4, 12
+    n_swaps, n_rebuilds = 30, 10
+    errors, responses = [], []
+    res_lock = threading.Lock()
+
+    def server():
+        try:
+            for _ in range(n_serves):
+                out = svc.serve_batch(batch)
+                with res_lock:
+                    responses.append(out)
+        except Exception as e:                     # pragma: no cover
+            errors.append(e)
+
+    def swapper():
+        try:
+            for i in range(n_swaps):
+                if i % 2 == 0:
+                    svc.swap_model(params_v2, state_v2)
+                else:
+                    svc.swap_model(params_v1, state_v1)
+        except Exception as e:                     # pragma: no cover
+            errors.append(e)
+
+    def rebuilder():
+        try:
+            for _ in range(n_rebuilds):
+                svc.rebuild_index()
+        except Exception as e:                     # pragma: no cover
+            errors.append(e)
+
+    threads = ([threading.Thread(target=server)
+                for _ in range(n_serve_threads)]
+               + [threading.Thread(target=swapper),
+                  threading.Thread(target=rebuilder)])
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    assert not errors, errors
+
+    for out in responses:
+        ms = out["merge_scores"]
+        valid = ms > NEG / 2
+        assert valid.any()
+        # (a) params/index_state pair consistent: torn pairs score -M
+        assert np.all(ms[valid] > M / 2), ms[valid]
+        # (b) one serving-index version per response: bias tag ±BIAS
+        # rides on top of M, and the served ids must match its sign
+        bias_signs = np.unique(np.sign(ms[valid] - M))
+        assert len(bias_signs) == 1 and bias_signs[0] != 0, ms[valid]
+        served = set(out["index_ids"][valid].tolist())
+        allowed = id_sets[int(bias_signs[0])]
+        assert served <= allowed, served - allowed
+
+    # exact counters despite the interleaving
+    total = n_serve_threads * n_serves + 1
+    assert svc.stats.n_batches == total
+    assert svc.stats.n_requests == 4 * total
+    assert svc.stats.index_swaps == n_swaps
+    assert svc.stats.index_rebuilds == 1 + n_rebuilds
+    assert svc.stats.mean_latency_ms > 0
