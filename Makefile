@@ -1,11 +1,15 @@
 # Repo entry points (tier-1 verify + benchmarks).
-.PHONY: test test-fast bench
+.PHONY: test test-fast bench bench-serving
 
-test:           ## full tier-1 suite (what CI runs)
+test:           ## full tier-1 suite incl. multi-device tier (what CI runs)
 	./scripts/test.sh
 
-test-fast:      ## tier-1 minus tests marked slow
+test-fast:      ## tier-1 minus tests marked slow (single invocation)
 	./scripts/test.sh -m 'not slow'
 
 bench:          ## paper-table benchmark harness
 	PYTHONPATH=src python -m benchmarks.run
+
+bench-serving:  ## serving throughput + p99 table (8 host-platform devices)
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	  PYTHONPATH=src python -m benchmarks.run --only serving

@@ -54,4 +54,29 @@ def run() -> list:
                  "real-time, inside the train step; rebuild time = 0"))
     rows.append(("index_build/svq_rebuild_s", 0.0,
                  "no offline stage exists (index immediacy, §3.1)"))
+
+    # Appendix-B serving-index build (the async candidate scan): lexsort
+    # oracle vs the fused integer-radix-key sort + searchsorted offsets
+    # (kernels/ops.index_sort dispatch in astore.build_serving_index)
+    from repro.core import assignment_store as astore
+    rng = np.random.default_rng(9)
+    n, k = 262_144, 4096
+    store = astore.init_store(n, 8)
+    n_wr = n // 2                          # half-occupied PS, like prod
+    store = astore.write(
+        store, jnp.asarray(rng.integers(0, 1 << 30, n_wr), jnp.int32),
+        jnp.asarray(rng.integers(0, k, n_wr), jnp.int32),
+        jnp.asarray(rng.normal(size=(n_wr, 8)), jnp.float32),
+        jnp.asarray(rng.normal(size=(n_wr,)), jnp.float32))
+    build_ref = jax.jit(lambda s: astore.build_serving_index(s, k))
+    build_fused = jax.jit(
+        lambda s: astore.build_serving_index(s, k, use_kernel=True))
+    us_ref, idx_ref = timed(build_ref, store, n=5)
+    us_fus, idx_fus = timed(build_fused, store, n=5)
+    parity = all(bool(jnp.array_equal(a, b))
+                 for a, b in zip(idx_ref, idx_fus))
+    rows.append(("index_build/svq_scan_lexsort_us", round(us_ref, 1),
+                 f"N={n} K={k} (oracle: lexsort + segment-sum)"))
+    rows.append(("index_build/svq_scan_fused_us", round(us_fus, 1),
+                 f"radix-key sort + searchsorted, bit_parity={parity}"))
     return rows

@@ -1,0 +1,160 @@
+"""Serving subsystem benchmark — throughput + tail latency (serve_p99).
+
+Compares three front doors over the SAME trained retriever:
+
+  single   batched ``RetrievalService.serve_batch`` on one device
+  sharded  cluster-major 8-way ``ShardedServingIndex`` over a
+           ("shard",) mesh (run via ``make bench-serving`` to force 8
+           host-platform devices; on fewer devices the shards are
+           logical and the numbers measure the sharded code path, not
+           real parallelism — the JSON records device_count)
+  batcher  the async micro-batching router: many small concurrent
+           requests multiplexed into bucketed jit calls, so the
+           recorded p99 INCLUDES queue wait (what a client sees)
+
+plus the double-buffer: rebuilds run in the background during the
+sharded phase, so its tail numbers include generation swaps.  Results
+land in ``BENCH_serving.json`` (p50/p95/p99 from the lock-exact
+log-spaced histograms plus requests/s), alongside a bit-parity bool of
+sharded vs single outputs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import trained_retriever
+from repro.launch.mesh import make_serving_mesh
+from repro.serving import RetrievalService
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_serving.json")
+B = 64                      # rows per batched serve call (CPU-sized)
+N_BATCHES = 24
+N_SHARDS = 8
+
+
+def _batches(tr, rng, n):
+    out = []
+    for _ in range(n):
+        users = rng.integers(0, tr.cfg.n_users, B).astype(np.int32)
+        out.append(dict(user_id=users,
+                        hist=tr.stream.user_hist[users].astype(np.int32)))
+    return out
+
+
+def _drive(svc, batches):
+    svc.serve_batch(batches[0])            # compile outside the window
+    svc.stats.reset_timings()              # ...and outside the histogram
+    t0 = time.perf_counter()
+    outs = [svc.serve_batch(b) for b in batches]
+    wall = time.perf_counter() - t0
+    return wall, outs
+
+
+def _stats_row(name, svc, wall, n_rows, rows, record):
+    st = svc.stats
+    rps = n_rows / wall
+    rows.append((f"serving/{name}_req_per_s", None, round(rps, 1)))
+    # latency lands in the derived column: the middle CSV column is
+    # microseconds-per-call by the run.py header, and these are ms
+    rows.append((f"serving/{name}_latency", None,
+                 f"p50={st.p50_ms:.1f}ms p95={st.p95_ms:.1f}ms "
+                 f"p99={st.p99_ms:.1f}ms"))
+    record["rows"][name] = dict(req_per_s=round(rps, 1),
+                                **st.snapshot())
+
+
+def run() -> list:
+    rng = np.random.default_rng(11)
+    tr = trained_retriever()
+    batches = _batches(tr, rng, N_BATCHES)
+    rows = []
+    record = {"backend": jax.default_backend(),
+              "device_count": jax.device_count(),
+              "shape": dict(batch=B, n_batches=N_BATCHES,
+                            n_shards=N_SHARDS,
+                            n_clusters=tr.cfg.n_clusters),
+              "rows": {}}
+
+    # ---- single-device batched serve -----------------------------------
+    svc = RetrievalService(tr.cfg, tr.params, tr.index)
+    wall, outs_single = _drive(svc, batches)
+    _stats_row("single_device", svc, wall, B * N_BATCHES, rows, record)
+
+    # ---- 8-way sharded serve (quiet index) -----------------------------
+    mesh = make_serving_mesh()
+    svc_sh = RetrievalService(tr.cfg, tr.params, tr.index,
+                              n_shards=N_SHARDS, mesh=mesh)
+    wall, outs_sh = _drive(svc_sh, batches)
+    _stats_row(f"sharded{N_SHARDS}", svc_sh, wall, B * N_BATCHES, rows,
+               record)
+    parity = all(
+        np.array_equal(a[k], b[k])
+        for a, b in zip(outs_single, outs_sh) for k in a)
+    rows.append(("serving/sharded_bit_parity", None, parity))
+    record["rows"]["sharded_bit_parity"] = parity
+
+    # ---- sharded serve under background rebuild churn ------------------
+    # double-buffered generations publish while traffic flows; the delta
+    # vs the quiet phase is the rebuild's tail contribution
+    svc_ch = RetrievalService(tr.cfg, tr.params, tr.index,
+                              n_shards=N_SHARDS, mesh=mesh)
+    svc_ch.start_auto_rebuild(interval_s=0.5)
+    wall, outs_ch = _drive(svc_ch, batches)
+    svc_ch.stop_auto_rebuild()
+    _stats_row("sharded_rebuild_churn", svc_ch, wall, B * N_BATCHES,
+               rows, record)
+    record["rows"]["churn_generations"] = svc_ch.index_generation.epoch
+    record["rows"]["churn_stale_serves"] = svc_ch.stats.stale_serves
+    parity_ch = all(
+        np.array_equal(a[k], b[k])
+        for a, b in zip(outs_single, outs_ch) for k in a)
+    record["rows"]["churn_bit_parity"] = parity_ch
+
+    # ---- micro-batcher: concurrent small requests ----------------------
+    batcher = svc.make_batcher(max_batch=B, max_delay_s=0.005)
+    n_threads, n_reqs = 8, 16
+    t0 = time.perf_counter()
+
+    def producer(tid):
+        r = np.random.default_rng(tid)
+        for _ in range(n_reqs):
+            users = r.integers(0, tr.cfg.n_users, 4).astype(np.int32)
+            batcher.submit(dict(
+                user_id=users,
+                hist=tr.stream.user_hist[users].astype(np.int32))
+            ).result(timeout=120)
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    batcher.close()
+    qw = svc.stats.stage("queue_wait")
+    rows.append(("serving/batcher_req_per_s", None,
+                 round(4 * n_threads * n_reqs / wall, 1)))
+    rows.append(("serving/batcher_queue_wait", None,
+                 f"p99={qw.percentile(0.99) * 1e3:.1f}ms, "
+                 f"{batcher.n_flushes} flushes, "
+                 f"{batcher.n_deadline_flushes} on deadline, "
+                 f"buckets={sorted(batcher.shapes_seen)}"))
+    record["rows"]["batcher"] = dict(
+        req_per_s=round(4 * n_threads * n_reqs / wall, 1),
+        queue_wait=qw.to_dict(), n_flushes=batcher.n_flushes,
+        n_deadline_flushes=batcher.n_deadline_flushes,
+        padded_rows=batcher.padded_rows,
+        buckets=sorted(batcher.shapes_seen))
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return rows

@@ -17,6 +17,7 @@ MODULES = [
     ("drift", "benchmarks.bench_drift"),              # §3.2
     ("merge_sort", "benchmarks.bench_merge_sort"),    # §3.4 / Alg. 1
     ("kernels", "benchmarks.bench_kernels"),          # kernel layer
+    ("serving", "benchmarks.bench_serving"),          # §3.4 / Appendix B
 ]
 
 

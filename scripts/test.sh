@@ -1,10 +1,22 @@
 #!/usr/bin/env bash
 # Tier-1 verify in one command: PYTHONPATH=src python -m pytest -x -q
 # Usage:
-#   scripts/test.sh            # full tier-1 suite
+#   scripts/test.sh            # full tier-1 suite + multi-device tier
 #   scripts/test.sh -m 'not slow'   # skip long-running tests
 #   scripts/test.sh tests/test_merge_serve.py   # any pytest args pass through
+#
+# With explicit args, runs a single pytest invocation (passthrough).
+# With no args, runs the full suite and then re-runs the sharded-serving
+# tests in a SEPARATE process with 8 forced host-platform devices, so
+# the cross-shard mesh path is exercised over real device boundaries
+# (XLA_FLAGS must be set before jax initializes, hence the new process).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+if [ "$#" -gt 0 ]; then
+  exec python -m pytest -x -q "$@"
+fi
+python -m pytest -x -q
+echo "[tier-1] multi-device tier (8 host-platform devices)"
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+  python -m pytest -x -q tests/test_sharded_serving.py

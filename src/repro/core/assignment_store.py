@@ -86,24 +86,38 @@ class ServingIndex(NamedTuple):
         return self.item_ids.shape[0]
 
 
-def build_serving_index(store: AssignmentStore,
-                        n_clusters: int) -> ServingIndex:
+def build_serving_index(store: AssignmentStore, n_clusters: int,
+                        use_kernel: bool = False) -> ServingIndex:
     """Sort occupied slots by (cluster asc, bias desc) -> segments.
 
     Empty slots (cluster == -1) sort to the end of a sentinel segment and
     are excluded via the offsets table.  Runs fully on device; in prod
     this is the asynchronous "candidate scanning" step (§3.1), which never
     blocks training.
+
+    The composite sort goes through the kernel-dispatch pattern:
+    ``use_kernel=True`` runs the fused integer-radix-key sort
+    (``kernels/ops.index_sort``) and derives offsets by binary search on
+    the sorted cluster ids (O(K log N) instead of an O(N) segment-sum);
+    the default is the ``kernels/ref.index_sort_ref`` lexsort oracle.
+    Both produce bit-identical indexes.
     """
     occupied = store.cluster >= 0
     cl = jnp.where(occupied, store.cluster, n_clusters)
-    # Composite sort key: cluster major, -bias minor (stable argsort).
-    order = jnp.lexsort((-store.item_bias, cl))
-    cl_sorted = cl[order]
-    counts = jax.ops.segment_sum(
-        jnp.ones_like(cl_sorted, jnp.int32), cl_sorted, n_clusters + 1)
-    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                               jnp.cumsum(counts[:n_clusters])])
+    if use_kernel:
+        from repro.kernels import ops as kops
+        order = kops.index_sort(cl, store.item_bias)
+        cl_sorted = cl[order]
+        offsets = jnp.searchsorted(
+            cl_sorted, jnp.arange(n_clusters + 1), side="left")
+    else:
+        from repro.kernels import ref as kref
+        order = kref.index_sort_ref(cl, store.item_bias)
+        cl_sorted = cl[order]
+        counts = jax.ops.segment_sum(
+            jnp.ones_like(cl_sorted, jnp.int32), cl_sorted, n_clusters + 1)
+        offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                   jnp.cumsum(counts[:n_clusters])])
     return ServingIndex(
         item_ids=store.item_id[order],
         item_emb=store.item_emb[order],

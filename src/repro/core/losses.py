@@ -17,16 +17,69 @@ import jax
 import jax.numpy as jnp
 
 
-def _inbatch_ce(logits: jax.Array, valid: Optional[jax.Array]) -> jax.Array:
-    """Mean over rows of -log softmax(logits)[o, o]."""
-    b = logits.shape[0]
-    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
-    pos = jnp.diagonal(logits).astype(jnp.float32)
-    losses = logz - pos
+def _masked_mean(losses: jax.Array,
+                 valid: Optional[jax.Array]) -> jax.Array:
     if valid is not None:
         losses = jnp.where(valid, losses, 0.0)
         return jnp.sum(losses) / jnp.maximum(jnp.sum(valid), 1.0)
     return jnp.mean(losses)
+
+
+def _inbatch_ce(logits: jax.Array, valid: Optional[jax.Array]) -> jax.Array:
+    """Mean over rows of -log softmax(logits)[o, o]."""
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    pos = jnp.diagonal(logits).astype(jnp.float32)
+    return _masked_mean(logz - pos, valid)
+
+
+def _ce_rows_ref(u: jax.Array, item_emb: jax.Array, bias: jax.Array,
+                 log_q: jax.Array) -> jax.Array:
+    """Per-row CE in plain jnp (the differentiable oracle form)."""
+    logits = (u.astype(jnp.float32) @ item_emb.astype(jnp.float32).T
+              + bias.astype(jnp.float32)[None, :]
+              - log_q.astype(jnp.float32)[None, :])
+    return jax.nn.logsumexp(logits, axis=-1) - jnp.diagonal(logits)
+
+
+@jax.custom_vjp
+def _ce_rows_kernel(u: jax.Array, item_emb: jax.Array, bias: jax.Array,
+                    log_q: jax.Array) -> jax.Array:
+    """Per-row CE through the fused Pallas inbatch_softmax kernel.
+
+    Forward avoids materializing the (B, B) logits in HBM; the backward
+    pass is the reference VJP (which does materialize them — a fused
+    backward kernel is a ROADMAP follow-up).
+    """
+    from repro.kernels import ops as kops
+    return kops.inbatch_softmax(u, item_emb, bias, log_q)
+
+
+def _ce_rows_fwd(u, item_emb, bias, log_q):
+    return _ce_rows_kernel(u, item_emb, bias, log_q), \
+        (u, item_emb, bias, log_q)
+
+
+def _ce_rows_bwd(res, g):
+    _, vjp = jax.vjp(_ce_rows_ref, *res)
+    return vjp(g)
+
+
+_ce_rows_kernel.defvjp(_ce_rows_fwd, _ce_rows_bwd)
+
+
+def _inbatch_ce_dispatch(u, item_emb, bias, log_q, valid, temperature,
+                         dtype, use_kernel) -> jax.Array:
+    """Single dispatch point for L_aux / L_ind (mirrors serve_kernel).
+
+    The kernel covers the exact-f32, temperature-1 case (what training
+    runs); other parameterizations fall back to the jnp logits path.
+    """
+    if use_kernel and dtype is None and temperature == 1.0:
+        lq = (log_q if log_q is not None
+              else jnp.zeros(bias.shape, jnp.float32))
+        return _masked_mean(_ce_rows_kernel(u, item_emb, bias, lq), valid)
+    return _inbatch_ce(build_logits(u, item_emb, bias, log_q, temperature,
+                                    dtype), valid)
 
 
 def build_logits(u: jax.Array, item_emb: jax.Array, item_bias: jax.Array,
@@ -53,16 +106,18 @@ def build_logits(u: jax.Array, item_emb: jax.Array, item_bias: jax.Array,
 def l_aux(u: jax.Array, v_emb: jax.Array, v_bias: jax.Array,
           log_q: Optional[jax.Array] = None,
           valid: Optional[jax.Array] = None,
-          temperature: float = 1.0, dtype=None) -> jax.Array:
+          temperature: float = 1.0, dtype=None,
+          use_kernel: bool = False) -> jax.Array:
     """Eq. 1: -log exp(u_o.v_o) / sum_r exp(u_o.v_r), debiased."""
-    return _inbatch_ce(build_logits(u, v_emb, v_bias, log_q, temperature,
-                                    dtype), valid)
+    return _inbatch_ce_dispatch(u, v_emb, v_bias, log_q, valid,
+                                temperature, dtype, use_kernel)
 
 
 def l_ind(u: jax.Array, v_emb: jax.Array, e_quantized: jax.Array,
           v_bias: jax.Array, log_q: Optional[jax.Array] = None,
           valid: Optional[jax.Array] = None,
-          temperature: float = 1.0, dtype=None) -> jax.Array:
+          temperature: float = 1.0, dtype=None,
+          use_kernel: bool = False) -> jax.Array:
     """Eq. 4 on straight-through quantized embeddings.
 
     ``e_quantized`` must already be the ST form v + sg(e - v) (vq.quantize),
@@ -70,8 +125,8 @@ def l_ind(u: jax.Array, v_emb: jax.Array, e_quantized: jax.Array,
     item tower receives the cluster's gradient ("item first", §3.2).
     """
     del v_emb  # the ST composition already happened in vq.quantize
-    return _inbatch_ce(build_logits(u, e_quantized, v_bias, log_q,
-                                    temperature, dtype), valid)
+    return _inbatch_ce_dispatch(u, e_quantized, v_bias, log_q, valid,
+                                temperature, dtype, use_kernel)
 
 
 def l_sim(v_emb: jax.Array, e: jax.Array,

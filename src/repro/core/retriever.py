@@ -145,9 +145,9 @@ def train_step(params: Params, state: IndexState, cfg: SVQConfig,
         for t in range(cfg.n_tasks):
             pos = labels[:, t] > 0
             la = losses.l_aux(u[t], v_emb, v_bias, logq, valid=pos,
-                              dtype=ldt)
+                              dtype=ldt, use_kernel=use_kernel)
             li = losses.l_ind(u[t], v_emb, e_st, v_bias, logq, valid=pos,
-                              dtype=ldt)
+                              dtype=ldt, use_kernel=use_kernel)
             total = total + la + li
             per_task[f"l_aux_{t}"] = la
             per_task[f"l_ind_{t}"] = li
@@ -213,6 +213,22 @@ def train_step(params: Params, state: IndexState, cfg: SVQConfig,
 # Serving (indexing step -> merge sort -> ranking step)
 # ---------------------------------------------------------------------------
 
+def rank_codebook(e: jax.Array, u: jax.Array, n: int,
+                  use_kernel: bool = False
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Top-n of ``u @ e.T`` per query over an arbitrary codebook slice.
+
+    Shared by the single-device path (full codebook) and the sharded
+    path (per-shard Ks rows — serving/sharding.py), so both dispatch
+    through the same kernel switch and stay bit-comparable.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.cluster_rank(u, e, n)
+    scores = u @ e.T                               # (B, K)
+    return jax.lax.top_k(scores, n)
+
+
 def rank_clusters(state: IndexState, u: jax.Array, n: int,
                   use_kernel: bool = False
                   ) -> Tuple[jax.Array, jax.Array]:
@@ -221,12 +237,8 @@ def rank_clusters(state: IndexState, u: jax.Array, n: int,
     ``use_kernel=True`` routes through the blocked Pallas kernel
     (online top-n over codebook blocks, no (B, K) matrix in HBM).
     """
-    e = state.vq.embeddings()
-    if use_kernel:
-        from repro.kernels import ops as kops
-        return kops.cluster_rank(u, e, n)
-    scores = u @ e.T                               # (B, K)
-    return jax.lax.top_k(scores, n)
+    return rank_codebook(state.vq.embeddings(), u, n,
+                         use_kernel=use_kernel)
 
 
 def serve_kernel(top_scores: jax.Array, bias: jax.Array,
@@ -283,8 +295,8 @@ def serve(params: Params, state: IndexState, cfg: SVQConfig,
         slab.reshape(slab.shape[0], -1),
         (c_idx * L + i_idx).astype(jnp.int32), axis=1)       # (B, S)
     cand_ids = index.item_ids[flat]
-    cand_emb = index.item_emb[flat]
-    cand_bias = index.item_bias[flat]
+    # the index's emb/bias payload is NOT gathered here: the ranking
+    # step re-embeds candidates from the model tables below
 
     # ---- ranking step over the compact candidate set -------------------
     # ("VQ Two-tower" or "VQ Complicated" per cfg.ranking, §3.5)

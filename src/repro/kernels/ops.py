@@ -63,6 +63,29 @@ def merge_serve(cluster_scores: jax.Array, bias_lists: jax.Array,
                               interpret=not _on_tpu())
 
 
+@jax.jit
+def index_sort(cluster: jax.Array, bias: jax.Array) -> jax.Array:
+    """Fused (cluster asc, bias desc) order via ONE integer-key sort.
+
+    The lexsort oracle compares a float key with total-order semantics;
+    here the bias is bit-mapped to a monotone uint32 (sign-flip trick,
+    then inverted for descending) so the whole order is a single
+    two-integer-key ``lax.sort`` — integer comparators, radix-friendly
+    on TPU, and no float total-order special cases in the hot loop.
+    Bit-identical to ``ref.index_sort_ref`` (ties keep submission
+    order; +/-0.0 are collapsed to preserve the IEEE-equality tie
+    behavior of lexsort, and NaN biases take the largest descending
+    key so they land LAST in their segment, like numpy sorts them).
+    """
+    bias = jnp.where(bias == 0.0, jnp.float32(0.0), bias.astype(jnp.float32))
+    b = jax.lax.bitcast_convert_type(bias, jnp.uint32)
+    asc = jnp.where((b >> 31) == 1, ~b, b | jnp.uint32(0x80000000))
+    desc = jnp.where(jnp.isnan(bias), jnp.uint32(0xFFFFFFFF), ~asc)
+    iota = jnp.arange(cluster.shape[0], dtype=jnp.int32)
+    return jax.lax.sort((cluster.astype(jnp.int32), desc, iota),
+                        num_keys=2, is_stable=True)[2]
+
+
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_kv"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     causal: bool = True, block_q: int = 256,

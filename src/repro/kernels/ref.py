@@ -66,6 +66,16 @@ def merge_serve_ref(cluster_scores: jax.Array, bias_lists: jax.Array,
         cluster_scores, bias_lists, lengths)
 
 
+def index_sort_ref(cluster: jax.Array, bias: jax.Array) -> jax.Array:
+    """Appendix-B index order: stable (cluster asc, bias desc) argsort.
+
+    ``cluster`` must already have empty slots mapped to the sentinel id
+    (n_clusters).  The two-key lexsort is the oracle the fused
+    radix-key ``ops.index_sort`` must reproduce exactly.
+    """
+    return jnp.lexsort((-bias, cluster)).astype(jnp.int32)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         causal: bool = True) -> jax.Array:
     """q,k,v: (S,hd) single head. -> (S,hd)."""

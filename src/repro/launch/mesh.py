@@ -30,6 +30,19 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh_auto(shape, axes)
 
 
+def make_serving_mesh(n_devices: int | None = None):
+    """1-D ("shard",) mesh for the sharded serving subsystem.
+
+    Cluster shards AND the request batch both partition over this single
+    axis (stage 1 is cluster-parallel, stage 4 batch-parallel — see
+    serving/sharding.py).  Defaults to every visible device; tests force
+    8 host-platform devices via XLA_FLAGS (scripts/test.sh multi-device
+    tier).
+    """
+    n = n_devices or len(jax.devices())
+    return make_mesh_auto((n,), ("shard",))
+
+
 def make_debug_mesh(n_devices: int | None = None):
     """Tiny mesh over whatever devices exist (tests)."""
     n = n_devices or len(jax.devices())

@@ -1,2 +1,27 @@
-from repro.serving.service import RetrievalService, ServeStats, \
-    drive_requests
+"""Serving subsystem for the streaming-VQ retriever.
+
+File -> paper-section map:
+
+  service.py    RetrievalService facade: the two-step serving pipeline
+                (Fig. 1, §3.4) plus the training-side swap hooks (§3.1
+                model dump cadence).
+  sharding.py   Cluster-major sharding of the Appendix-B compact index
+                over a device mesh; per-shard cluster ranking (Eq. 5/11)
+                with a bit-exact cross-shard merge — the "scoring is
+                naturally distributed over clusters" property of §3.4.
+  swap.py       Double-buffered, epoch-tagged index generations: the
+                asynchronous "candidate scanning" rebuild of §3.1 that
+                never blocks serving (nor training).
+  batcher.py    Async micro-batching request router: multiplexes the
+                per-user request stream ("heavy traffic", §1) into
+                fixed-bucket jitted serve calls under a deadline bound.
+  telemetry.py  Lock-exact counters + log-spaced latency histograms:
+                makes the serve_p99 shape of Appendix B benchmarkable.
+"""
+from repro.serving.batcher import MicroBatcher, ServeFuture
+from repro.serving.service import RetrievalService, drive_requests
+from repro.serving.sharding import (ShardedServingIndex,
+                                    place_sharded_index,
+                                    shard_serving_index, sharded_serve)
+from repro.serving.swap import DoubleBufferedIndex, IndexGeneration
+from repro.serving.telemetry import LatencyHistogram, ServeStats

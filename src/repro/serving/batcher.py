@@ -1,0 +1,248 @@
+"""Async micro-batching request router (the "heavy traffic" front door).
+
+Production retrieval traffic is millions of small per-user requests, but
+the TPU path wants large fixed-shape batches: one jitted serve call per
+micro-batch, padded to a BUCKETED shape so XLA compiles once per bucket
+instead of once per request size.  ``MicroBatcher`` multiplexes
+concurrent producers into such calls:
+
+  submit() -> request joins the queue, producer blocks on a future
+  flush triggers:  (a) queued rows reach ``max_batch``  (size trigger)
+                   (b) the oldest request ages past ``max_delay_s``
+                       (deadline trigger -> bounded added latency)
+
+A flush drains the oldest request's task group (requests for different
+user-tower tasks never share a jit call — ``task`` is a static argument
+of the serve function), concatenates the rows, pads them up to the next
+bucket, runs ``serve_fn`` ONCE, and scatters row slices back to each
+waiting future.  Queue-wait and flush latencies are recorded into the
+shared ``ServeStats`` stage histograms, so the p99 seen by a *request*
+(wait + serve) is observable, not just the p99 of the jit call.
+"""
+from __future__ import annotations
+
+import inspect
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.telemetry import ServeStats
+
+
+def default_buckets(max_batch: int) -> Tuple[int, ...]:
+    """Powers of two up to (and including) max_batch."""
+    out = []
+    b = 1
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(max_batch)
+    return tuple(out)
+
+
+class ServeFuture:
+    """Single-assignment result slot a producer blocks on.
+
+    Deliberately NOT concurrent.futures.Future: used as a bare promise
+    (no executor), it raises the BUILTIN TimeoutError (the stdlib class
+    is a distinct type before 3.11) and exposes no cancellation surface
+    the batcher would then have to honor."""
+
+    __slots__ = ("_event", "_value", "_error")
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._value = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError("serve request timed out")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    def _set(self, value) -> None:
+        self._value = value
+        self._event.set()
+
+    def _set_error(self, err: BaseException) -> None:
+        self._error = err
+        self._event.set()
+
+
+class _Pending:
+    __slots__ = ("batch", "rows", "task", "future", "t_enqueue")
+
+    def __init__(self, batch: Dict[str, np.ndarray], rows: int, task: int,
+                 future: ServeFuture):
+        self.batch = batch
+        self.rows = rows
+        self.task = task
+        self.future = future
+        self.t_enqueue = time.monotonic()
+
+
+class MicroBatcher:
+    """Deadline/size-triggered micro-batching in front of a serve fn.
+
+    ``serve_fn(batch: Dict[str, np.ndarray], task: int) -> Dict`` must
+    return arrays with a leading batch axis (RetrievalService.serve_batch
+    qualifies).  Close with ``close()`` (drains the queue first).
+    """
+
+    def __init__(self, serve_fn: Callable[[Dict[str, np.ndarray], int],
+                                          Dict[str, np.ndarray]],
+                 max_batch: int = 64, max_delay_s: float = 0.002,
+                 buckets: Optional[Sequence[int]] = None,
+                 stats: Optional[ServeStats] = None):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self._serve_fn = serve_fn
+        # serve fns that accept ``n_valid`` get the REAL row count, so
+        # their request counters exclude the bucket-padding rows
+        try:
+            self._pass_n_valid = "n_valid" in \
+                inspect.signature(serve_fn).parameters
+        except (TypeError, ValueError):            # pragma: no cover
+            self._pass_n_valid = False
+        self.max_batch = max_batch
+        self.max_delay_s = max_delay_s
+        self.buckets = tuple(sorted(set(buckets or
+                                        default_buckets(max_batch))))
+        if self.buckets[-1] < max_batch:
+            raise ValueError("largest bucket must cover max_batch")
+        self.stats = stats if stats is not None else ServeStats()
+        # exact flush accounting (mutated only by the worker thread)
+        self.n_flushes = 0
+        self.n_size_flushes = 0
+        self.n_deadline_flushes = 0
+        self.padded_rows = 0
+        self.served_rows = 0
+        self.shapes_seen: set = set()
+
+        self._pending: List[_Pending] = []
+        self._cond = threading.Condition()
+        self._closed = False
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="micro-batcher")
+        self._worker.start()
+
+    # -- producer side -----------------------------------------------------
+    def submit(self, batch: Dict[str, np.ndarray],
+               task: int = 0) -> ServeFuture:
+        """Enqueue a small request; returns a future for its row slice."""
+        batch = {k: np.asarray(v) for k, v in batch.items()}
+        rows = len(batch["user_id"])
+        if rows == 0 or rows > self.max_batch:
+            raise ValueError(f"request rows must be in [1, {self.max_batch}]"
+                             f", got {rows}")
+        fut = ServeFuture()
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("batcher is closed")
+            self._pending.append(_Pending(batch, rows, task, fut))
+            self._cond.notify()
+        return fut
+
+    def close(self) -> None:
+        """Drain remaining requests, then stop the worker."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify()
+        self._worker.join()
+
+    # -- worker side -------------------------------------------------------
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                while True:
+                    if self._pending:
+                        oldest = self._pending[0]
+                        # the size trigger scans EVERY task group (a
+                        # full group must not be head-of-line blocked
+                        # behind another task's lone aging request);
+                        # one O(P) pass, the queue can be long
+                        rows_by_task: Dict[int, int] = {}
+                        size_task = None
+                        for p in self._pending:
+                            r = rows_by_task.get(p.task, 0) + p.rows
+                            rows_by_task[p.task] = r
+                            if r >= self.max_batch:
+                                size_task = p.task
+                                break
+                        if size_task is not None:
+                            flush_task, deadline_flush = size_task, False
+                            break
+                        wait_left = (oldest.t_enqueue + self.max_delay_s
+                                     - time.monotonic())
+                        if wait_left <= 0 or self._closed:
+                            flush_task, deadline_flush = oldest.task, True
+                            break
+                        self._cond.wait(timeout=wait_left)
+                    elif self._closed:
+                        return
+                    else:
+                        self._cond.wait()
+                group = self._take_group(flush_task)
+            self._flush(group, flush_task, deadline_flush)
+
+    def _take_group(self, task: int) -> List[_Pending]:
+        """Pop FIFO requests of ``task`` until max_batch rows (cond held)."""
+        group, rows, rest = [], 0, []
+        for p in self._pending:
+            if p.task == task and rows + p.rows <= self.max_batch:
+                group.append(p)
+                rows += p.rows
+            else:
+                rest.append(p)
+        self._pending = rest
+        return group
+
+    def _flush(self, group: List[_Pending], task: int,
+               deadline_flush: bool) -> None:
+        t_flush = time.monotonic()
+        rows = sum(p.rows for p in group)
+        for p in group:
+            self.stats.stage("queue_wait").record(t_flush - p.t_enqueue)
+        try:
+            # batch assembly stays inside the error path: a malformed
+            # request (mismatched keys/shapes across the group) must
+            # fail ITS futures, not kill the worker thread
+            bucket = next(b for b in self.buckets if b >= rows)
+            keys = group[0].batch.keys()
+            batch = {}
+            for k in keys:
+                cat = np.concatenate([p.batch[k] for p in group], axis=0)
+                if bucket > rows:
+                    # pad by repeating row 0: valid ids, constant shape
+                    pad = np.repeat(cat[:1], bucket - rows, axis=0)
+                    cat = np.concatenate([cat, pad], axis=0)
+                batch[k] = cat
+            if self._pass_n_valid:
+                out = self._serve_fn(batch, task, n_valid=rows)
+            else:
+                out = self._serve_fn(batch, task)
+        except BaseException as e:
+            for p in group:
+                p.future._set_error(e)
+            return
+        self.stats.stage("batcher_flush").record(time.monotonic() - t_flush)
+        self.n_flushes += 1
+        if deadline_flush:
+            self.n_deadline_flushes += 1
+        else:
+            self.n_size_flushes += 1
+        self.padded_rows += bucket - rows
+        self.served_rows += rows
+        self.shapes_seen.add(bucket)
+        lo = 0
+        for p in group:
+            sl = {k: v[lo:lo + p.rows] for k, v in out.items()}
+            lo += p.rows
+            p.future._set(sl)

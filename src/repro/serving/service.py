@@ -1,20 +1,27 @@
 """Retrieval service: the two-step serving pipeline of Fig. 1 / §3.4.
 
-RetrievalService owns
-  - the trained retriever params,
-  - the live IndexState (codebook + PS tables, swapped in atomically from
-    the training side — the 5-10 min "model dump period" of §3.1 is the
-    swap cadence; assignments inside it are already real-time),
-  - the ServingIndex (Appendix-B compact layout), rebuilt asynchronously
-    from the assignment store ("candidate scanning" — never blocks
-    training OR serving).
+RetrievalService is now a thin facade over the serving subsystem
+(see ``serving/__init__.py`` for the file -> paper-section map):
+
+  - the trained retriever params + live IndexState (codebook + PS
+    tables), swapped in atomically from the training side (§3.1 model
+    dump cadence; assignments inside it are already real-time),
+  - the ServingIndex lifecycle, double-buffered behind
+    ``swap.DoubleBufferedIndex``: a background (or on-demand) rebuild
+    produces the next epoch-tagged generation from the live
+    AssignmentStore while the old generation keeps serving,
+  - optional cluster-major sharding over a device mesh
+    (``sharding.ShardedServingIndex``; pass ``n_shards`` / ``mesh``),
+  - lock-exact counters + log-spaced latency histograms
+    (``telemetry.ServeStats``) so p50/p95/p99 are benchmarkable,
+  - an async micro-batching front door (``make_batcher``) multiplexing
+    many small client requests into one jitted serve call.
 
 serve_batch: cluster ranking (Eq. 11) -> k-way chunked merge sort
 (Alg. 1) -> ranking-step model -> final ordered candidates.
 """
 from __future__ import annotations
 
-import dataclasses
 import threading
 import time
 from typing import Dict, List, Optional
@@ -26,41 +33,63 @@ import numpy as np
 from repro.configs.base import SVQConfig
 from repro.core import assignment_store as astore
 from repro.core import retriever
-
-
-@dataclasses.dataclass
-class ServeStats:
-    n_requests: int = 0
-    n_batches: int = 0
-    total_latency_s: float = 0.0
-    index_rebuilds: int = 0
-    index_swaps: int = 0
-
-    @property
-    def mean_latency_ms(self) -> float:
-        return 1e3 * self.total_latency_s / max(self.n_batches, 1)
+from repro.serving import batcher as batcher_lib
+from repro.serving import sharding as sharding_lib
+from repro.serving.swap import DoubleBufferedIndex, IndexGeneration
+from repro.serving.telemetry import ServeStats
 
 
 class RetrievalService:
     def __init__(self, cfg: SVQConfig, params, index_state,
-                 items_per_cluster: int = 256, use_kernel: bool = False):
+                 items_per_cluster: int = 256, use_kernel: bool = False,
+                 n_shards: Optional[int] = None, mesh=None):
         self.cfg = cfg
         self.items_per_cluster = items_per_cluster
         self.use_kernel = use_kernel
+        self.n_shards = n_shards
+        self.mesh = mesh
         self.stats = ServeStats()
         self._lock = threading.Lock()
         self._params = params
         self._index_state = index_state
-        self._serving_index = astore.build_serving_index(
-            index_state.store, cfg.n_clusters)
-        self.stats.index_rebuilds += 1
-        # single dispatch: the fused Pallas path and the lax fallback go
-        # through the same retriever.serve_kernel switch
-        self._serve_jit = jax.jit(
-            lambda p, s, idx, b: retriever.serve(
-                p, s, cfg, idx, b,
-                items_per_cluster=items_per_cluster,
-                use_kernel=use_kernel))
+        self._buffer = DoubleBufferedIndex(
+            self._build_index, self._build_index(),
+            on_publish=self._on_publish)
+        self.stats.index_rebuilds += 1          # the initial build
+        # single dispatch: single-device and sharded serve go through the
+        # same retriever serve_kernel/rank_codebook switches
+        if n_shards:
+            def _serve(p, s, idx, b, task):
+                return sharding_lib.sharded_serve(
+                    p, s, cfg, idx, b,
+                    items_per_cluster=items_per_cluster, task=task,
+                    use_kernel=use_kernel, mesh=mesh)
+        else:
+            def _serve(p, s, idx, b, task):
+                return retriever.serve(
+                    p, s, cfg, idx, b,
+                    items_per_cluster=items_per_cluster, task=task,
+                    use_kernel=use_kernel)
+        self._serve_jit = jax.jit(_serve, static_argnames=("task",))
+
+    # -- index lifecycle (swap.py) -----------------------------------------
+    def _build_index(self):
+        """Snapshot the live store -> fresh Appendix-B layout (+shards)."""
+        with self._lock:
+            state = self._index_state
+        idx = astore.build_serving_index(state.store, self.cfg.n_clusters,
+                                         use_kernel=self.use_kernel)
+        if self.n_shards:
+            idx = sharding_lib.shard_serving_index(
+                idx, self.cfg.n_clusters, self.n_shards)
+            if self.mesh is not None:
+                idx = sharding_lib.place_sharded_index(idx, self.mesh)
+        return idx
+
+    def _on_publish(self, gen: IndexGeneration, build_s: float) -> None:
+        with self._lock:
+            self.stats.index_rebuilds += 1
+        self.stats.stage("rebuild").record(build_s)
 
     # -- training-side hooks -------------------------------------------------
     def swap_model(self, params, index_state) -> None:
@@ -70,40 +99,66 @@ class RetrievalService:
             self._index_state = index_state
             self.stats.index_swaps += 1
 
-    def rebuild_index(self) -> None:
-        """Asynchronous candidate scan -> fresh Appendix-B layout."""
-        with self._lock:
-            state = self._index_state
-        new_index = astore.build_serving_index(state.store,
-                                               self.cfg.n_clusters)
-        with self._lock:
-            self._serving_index = new_index
-            self.stats.index_rebuilds += 1
+    def rebuild_index(self) -> IndexGeneration:
+        """Synchronous candidate scan -> next index generation."""
+        return self._buffer.rebuild_once()
+
+    def start_auto_rebuild(self, interval_s: float) -> None:
+        """Background double-buffered rebuilds every ``interval_s``."""
+        self._buffer.start_background(interval_s)
+
+    def stop_auto_rebuild(self) -> None:
+        self._buffer.stop_background()
+
+    @property
+    def index_generation(self) -> IndexGeneration:
+        return self._buffer.current()
 
     # -- request path ----------------------------------------------------------
-    def serve_batch(self, batch: Dict[str, np.ndarray],
-                    task: int = 0) -> Dict[str, np.ndarray]:
+    def serve_batch(self, batch: Dict[str, np.ndarray], task: int = 0,
+                    n_valid: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """Serve one request batch.
+
+        ``n_valid`` lets a padding caller (the MicroBatcher) report how
+        many leading rows are real so ``stats.n_requests`` stays exact.
+        """
         t0 = time.perf_counter()
         with self._lock:
-            params, state, idx = (self._params, self._index_state,
-                                  self._serving_index)
-        out = self._serve_jit(params, state, idx,
-                              {k: jnp.asarray(v) for k, v in batch.items()})
+            params, state = self._params, self._index_state
+        gen = self._buffer.current()            # atomic epoch-tagged read
+        t_jit = time.perf_counter()
+        out = self._serve_jit(params, state, gen.index,
+                              {k: jnp.asarray(v) for k, v in batch.items()},
+                              task=task)
         out = {k: np.asarray(v) for k, v in out.items()}
-        dt = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.stats.stage("serve_jit").record(t1 - t_jit)
+        self.stats.latency.record(t1 - t0)
         # counters mutate under the lock so concurrent callers stay exact
         with self._lock:
             self.stats.n_batches += 1
-            self.stats.n_requests += len(batch["user_id"])
-            self.stats.total_latency_s += dt
+            self.stats.n_requests += (n_valid if n_valid is not None
+                                      else len(batch["user_id"]))
+            self.stats.total_latency_s += t1 - t0
+            self.stats.generation = gen.epoch
+            if gen.epoch < self._buffer.latest_epoch:
+                self.stats.stale_serves += 1
         return out
+
+    def make_batcher(self, max_batch: int = 64,
+                     max_delay_s: float = 0.002,
+                     buckets=None) -> batcher_lib.MicroBatcher:
+        """Micro-batching front door sharing this service's telemetry."""
+        return batcher_lib.MicroBatcher(
+            self.serve_batch, max_batch=max_batch,
+            max_delay_s=max_delay_s, buckets=buckets, stats=self.stats)
 
 
 def drive_requests(service: RetrievalService, batches: List[Dict],
-                   rebuild_every: int = 0) -> ServeStats:
+                   rebuild_every: int = 0, task: int = 0) -> ServeStats:
     """Batched request driver (examples / benchmarks)."""
     for i, b in enumerate(batches):
-        service.serve_batch(b)
+        service.serve_batch(b, task=task)
         if rebuild_every and (i + 1) % rebuild_every == 0:
             service.rebuild_index()
     return service.stats

@@ -1,0 +1,261 @@
+"""Cluster-major sharding of the Appendix-B serving index.
+
+The compact serving layout (``astore.ServingIndex``) is one contiguous
+item array segmented by cluster.  ``shard_serving_index`` partitions it
+CLUSTER-MAJOR over ``n_shards``: shard d owns clusters
+[d*Ks, (d+1)*Ks) and, because the layout is cluster-sorted, the
+contiguous global item range [item_base[d], item_base[d+1]).  Per-shard
+arrays are padded to a power-of-two capacity bucket so rebuilds keep a
+stable shape (no recompile until a bucket overflows), and the constant
+sentinel tail (empty PS slots: id -1, bias 0) is synthesized at gather
+time instead of being stored D times.
+
+``sharded_serve`` is the distributed two-step pipeline, bit-exact vs the
+single-device ``retriever.serve`` on the same underlying index:
+
+  1. per-shard indexing step — every shard ranks its own Ks codebook
+     rows (``rank_codebook``: Pallas ``cluster_rank`` or the lax
+     fallback, the same dispatch the single-device path uses) and emits
+     its local top-n(C) cluster candidates;
+  2. cross-shard cluster merge — a global top-C over the concatenated
+     per-shard candidates.  Per-shard lists are sorted with ties broken
+     toward lower cluster id and concatenated in shard order, so the
+     merged ``lax.top_k`` reproduces the single-device tie-breaking
+     exactly (first-occurrence == lowest global cluster id);
+  3. routed slab fetch — the (B, C, L) pre-sorted bias slabs are
+     gathered from the owning shards only (merge-then-fetch: the
+     cross-shard traffic is C slabs per query, the same volume the
+     single-device path reads from HBM);
+  4. one ``serve_kernel`` merge (Alg. 1) over the merged slabs,
+     data-parallel over the request batch on the same device axis; the
+     final candidate payload gather routes each global flat position
+     back to its owning shard.  The closing ranking step is pinned
+     REPLICATED: a batch-partitioned MLP forward is not bitwise stable
+     (gemm remainder panels), and the bit-exact contract wins over
+     parallelizing the small ranking head (ROADMAP follow-up).
+
+When a ``jax.sharding.Mesh`` is supplied (``launch/mesh.py:
+make_serving_mesh``), the index arrays carry NamedShardings over the
+``"shard"`` axis and the batch-stage intermediates are constrained to
+the same axis, so stage 1 runs cluster-parallel and stage 4 runs
+request-parallel on the same devices.  Without a mesh everything
+degrades to single-device arrays with identical numerics.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SVQConfig
+from repro.core import assignment_store as astore
+from repro.core import merge_sort, ranking
+from repro.core.retriever import (IndexState, Params, item_features,
+                                  rank_codebook, serve_kernel,
+                                  user_features)
+from repro.models.dense import mlp
+from repro.utils.sharding import constrain
+
+SHARD_AXIS = "shard"
+
+
+class ShardedServingIndex(NamedTuple):
+    """Cluster-major shards of one ServingIndex generation.
+
+    Shard d's arrays hold its real items in [0, count_d) of the padded
+    capacity; ``offsets[d]`` are shard-local segment starts for its Ks
+    clusters; ``item_base[d]`` maps local back to global flat positions.
+    Only the serve-path payload (id + bias) is sharded: the ranking
+    step re-embeds candidates from the model tables, so the Appendix-B
+    embedding payload stays in the unsharded ServingIndex (a fused
+    slab-gather kernel would add it here — ROADMAP).
+    """
+    item_ids: jax.Array      # (D, cap) int32, -1 padded
+    item_bias: jax.Array     # (D, cap) sorted desc within each segment
+    offsets: jax.Array       # (D, Ks+1) int32 shard-local
+    item_base: jax.Array     # (D,) int32 global pos of shard's first item
+    n_real: jax.Array        # () int32: total real (non-sentinel) items
+    n_items: jax.Array       # () int32: global capacity incl. sentinels
+
+    @property
+    def n_shards(self) -> int:
+        return self.item_ids.shape[0]
+
+    @property
+    def clusters_per_shard(self) -> int:
+        return self.offsets.shape[1] - 1
+
+    @property
+    def capacity(self) -> int:
+        return self.item_ids.shape[1]
+
+
+def _bucket(n: int, quantum: int) -> int:
+    """Smallest power-of-two multiple of quantum holding n items."""
+    b = max(quantum, 1)
+    while b < n:
+        b *= 2
+    return b
+
+
+def shard_serving_index(index: astore.ServingIndex, n_clusters: int,
+                        n_shards: int,
+                        cap_quantum: int = 256) -> ShardedServingIndex:
+    """Host-side cluster-major partition (part of the async rebuild)."""
+    if n_clusters % n_shards:
+        raise ValueError(f"n_clusters={n_clusters} not divisible by "
+                         f"n_shards={n_shards}")
+    ks = n_clusters // n_shards
+    offs = np.asarray(index.offsets)
+    ids = np.asarray(index.item_ids)
+    bias = np.asarray(index.item_bias)
+    n_real = int(offs[n_clusters])
+    # The sentinel tail (never-written PS slots) must be constant so the
+    # sharded gather can synthesize it; guard the bit-exactness claim.
+    if not ((ids[n_real:] == -1).all() and (bias[n_real:] == 0.0).all()):
+        raise ValueError("sentinel tail is not constant (-1 id, 0 bias)")
+
+    base = offs[np.arange(n_shards) * ks].astype(np.int32)
+    ends = np.concatenate([base[1:], [n_real]]).astype(np.int32)
+    counts = ends - base
+    cap = _bucket(int(counts.max(initial=0)), cap_quantum)
+
+    s_ids = np.full((n_shards, cap), -1, np.int32)
+    s_bias = np.zeros((n_shards, cap), bias.dtype)
+    s_offs = np.zeros((n_shards, ks + 1), np.int32)
+    for d in range(n_shards):
+        lo, hi = int(base[d]), int(ends[d])
+        s_ids[d, :hi - lo] = ids[lo:hi]
+        s_bias[d, :hi - lo] = bias[lo:hi]
+        s_offs[d] = offs[d * ks:(d + 1) * ks + 1] - base[d]
+    return ShardedServingIndex(
+        item_ids=jnp.asarray(s_ids),
+        item_bias=jnp.asarray(s_bias), offsets=jnp.asarray(s_offs),
+        item_base=jnp.asarray(base),
+        n_real=jnp.int32(n_real), n_items=jnp.int32(index.n_items))
+
+
+def place_sharded_index(sidx: ShardedServingIndex, mesh: Mesh,
+                        axis: str = SHARD_AXIS) -> ShardedServingIndex:
+    """Commit the shard arrays to devices along ``axis`` of ``mesh``."""
+    if sidx.n_shards % mesh.shape[axis]:
+        raise ValueError(f"n_shards={sidx.n_shards} not divisible by mesh "
+                         f"axis {axis}={mesh.shape[axis]}")
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return ShardedServingIndex(
+        item_ids=put(sidx.item_ids, P(axis, None)),
+        item_bias=put(sidx.item_bias, P(axis, None)),
+        offsets=put(sidx.offsets, P(axis, None)),
+        item_base=put(sidx.item_base, P()),       # replicated: routing table
+        n_real=put(sidx.n_real, P()),
+        n_items=put(sidx.n_items, P()))
+
+
+def sharded_serve(params: Params, state: IndexState, cfg: SVQConfig,
+                  sidx: ShardedServingIndex, batch: Dict[str, jax.Array],
+                  items_per_cluster: int = 256, task: int = 0,
+                  use_kernel: bool = False,
+                  mesh: Optional[Mesh] = None) -> Dict[str, jax.Array]:
+    """Distributed two-step retrieval, bit-exact vs ``retriever.serve``."""
+    D = sidx.n_shards
+    ks = sidx.clusters_per_shard
+    cap = sidx.capacity
+    C = cfg.clusters_per_query
+    L = items_per_cluster
+    n_local = min(C, ks)
+
+    user_feat, hist_emb = user_features(params, batch["user_id"],
+                                        batch["hist"])
+    u = jax.vmap(lambda tw: mlp(tw, user_feat))(params["user_towers"])[task]
+    u = constrain(u, mesh, P(SHARD_AXIS, None))
+
+    # ---- stage 1: per-shard indexing step (local cluster ranking) ------
+    e_all = state.vq.embeddings()
+    vals_l, ids_l = [], []
+    for d in range(D):
+        e_d = jax.lax.slice_in_dim(e_all, d * ks, (d + 1) * ks)
+        v, i = rank_codebook(e_d, u, n_local, use_kernel=use_kernel)
+        vals_l.append(v)
+        ids_l.append(i + jnp.int32(d * ks))
+    # shard-order concat: ties resolve to the lower global cluster id,
+    # exactly like the single-device lax.top_k over the full codebook
+    vals = constrain(jnp.concatenate(vals_l, axis=1), mesh,
+                      P(None, SHARD_AXIS))
+    gids = constrain(jnp.concatenate(ids_l, axis=1), mesh,
+                      P(None, SHARD_AXIS))
+
+    # ---- stage 2: cross-shard cluster merge ----------------------------
+    top_scores, sel = jax.lax.top_k(vals, C)
+    top_clusters = jnp.take_along_axis(gids, sel, axis=1)        # (B, C)
+    top_scores = constrain(top_scores, mesh, P(SHARD_AXIS, None))
+    top_clusters = constrain(top_clusters, mesh, P(SHARD_AXIS, None))
+
+    # ---- stage 3: routed slab fetch from the owning shards -------------
+    owner = top_clusters // ks                                   # (B, C)
+    local_c = top_clusters % ks
+    lstart = sidx.offsets[owner, local_c]
+    counts = sidx.offsets[owner, local_c + 1] - lstart
+    ar = jnp.arange(L, dtype=jnp.int32)
+    # global flat positions, identical (incl. the n-1 clamp) to the
+    # single-device ``starts[..., None] + arange`` slab
+    slab = jnp.minimum(sidx.item_base[owner][..., None]
+                       + lstart[..., None] + ar, sidx.n_items - 1)
+    lengths = jnp.minimum(counts, L)
+    # bias values come from the owning shard's local arrays; lanes past
+    # ``lengths`` are padding garbage in BOTH paths and both merge
+    # implementations mask them, so outputs stay bit-exact
+    lslab = jnp.minimum(lstart[..., None] + ar, cap - 1)
+    bias = sidx.item_bias[owner[..., None], lslab]               # (B, C, L)
+    bias = constrain(bias, mesh, P(SHARD_AXIS, None, None))
+
+    # ---- stage 4: Alg. 1 merge + ranking step (batch-parallel) ---------
+    S = cfg.candidates_out
+    pos, msort_scores = serve_kernel(top_scores, bias, lengths,
+                                     cfg.chunk_size, S,
+                                     use_kernel=use_kernel)
+    valid = pos >= 0
+    c_idx = jnp.clip(pos, 0) // L
+    i_idx = jnp.clip(pos, 0) % L
+    flat = jnp.take_along_axis(
+        slab.reshape(slab.shape[0], -1),
+        (c_idx * L + i_idx).astype(jnp.int32), axis=1)           # (B, S)
+
+    # route every flat position back to its owning shard; sentinel-tail
+    # positions (>= n_real) synthesize the constant empty-slot payload
+    fowner = jnp.clip(
+        jnp.searchsorted(sidx.item_base, flat, side="right") - 1, 0, D - 1)
+    flocal = jnp.clip(flat - sidx.item_base[fowner], 0, cap - 1)
+    in_tail = flat >= sidx.n_real
+    cand_ids = jnp.where(in_tail, jnp.int32(-1),
+                         sidx.item_ids[fowner, flocal])
+
+    # Ranking-step inputs are pinned replicated: a batch-partitioned MLP
+    # forward is NOT bitwise stable (gemm remainder panels reorder the
+    # per-row accumulation), and the bit-exact contract vs the
+    # single-device serve matters more here than parallelizing the small
+    # "VQ Two-tower" head.  Batch-parallel ranking (tolerance-based
+    # parity) is a ROADMAP follow-up.
+    cand_ids = constrain(cand_ids, mesh, P())
+    user_feat = constrain(user_feat, mesh, P())
+    hist_emb = constrain(hist_emb, mesh, P())
+    cand_cate = jnp.zeros_like(cand_ids)
+    item_feat = item_features(params, cand_ids, cand_cate)
+    cross = (item_feat[..., :cfg.item_embed_dim]
+             * user_feat[..., None, -cfg.item_embed_dim:])
+    rscores = ranking.ranking_scores(params["rank"], cfg, user_feat,
+                                     item_feat, hist_emb, cross)[task]
+    rscores = constrain(rscores, mesh, P())
+    rscores = jnp.where(valid, rscores, merge_sort.NEG)
+    order = jnp.argsort(-rscores, axis=-1)
+    return dict(
+        item_ids=jnp.take_along_axis(cand_ids, order, axis=1),
+        scores=jnp.take_along_axis(rscores, order, axis=1),
+        merge_scores=msort_scores,
+        index_ids=cand_ids,
+        valid=jnp.take_along_axis(valid, order, axis=1))

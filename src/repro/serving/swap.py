@@ -1,0 +1,102 @@
+"""Double-buffered serving-index lifecycle (§3.1 "candidate scanning").
+
+The paper rebuilds the compact Appendix-B index ASYNCHRONOUSLY from the
+live assignment PS: serving never pauses for a rebuild, and a rebuild
+never sees a half-written index.  ``DoubleBufferedIndex`` models that as
+two generations: the LIVE generation serves lock-free reads while a
+single background builder produces generation N+1 from the live
+``AssignmentStore`` snapshot; publication is one atomic reference swap
+of an epoch-tagged ``IndexGeneration`` (a CPython attribute store, so a
+reader sees either the old pair or the new pair, never a mix).
+
+Epochs are strictly monotone: every publish increments the epoch, and
+``latest_epoch`` lets the serving side count staleness: how often a
+response was produced while a newer generation was ALREADY live, i.e.
+a rebuild published mid-serve.  Under background rebuild churn this is
+the overlap metric (see ServeStats.stale_serves), not an error.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, NamedTuple, Optional
+
+from repro.serving.telemetry import LatencyHistogram
+
+
+class IndexGeneration(NamedTuple):
+    """One immutable published generation of the serving index."""
+    epoch: int
+    index: Any                  # ServingIndex | ShardedServingIndex
+    published_at: float         # time.monotonic() at publish
+
+
+class DoubleBufferedIndex:
+    """Epoch-tagged atomic index double buffer with a background builder.
+
+    ``build_fn()`` must snapshot its own inputs (the service passes a
+    closure that reads the live IndexState under the service lock) and
+    return a fully-built index; it runs on the caller's thread in
+    ``rebuild_once`` and on the private thread in ``start_background``.
+    """
+
+    def __init__(self, build_fn: Callable[[], Any], initial_index: Any,
+                 on_publish: Optional[Callable[[IndexGeneration, float],
+                                              None]] = None):
+        self._build_fn = build_fn
+        self._on_publish = on_publish
+        self._gen = IndexGeneration(0, initial_index, time.monotonic())
+        self._build_lock = threading.Lock()     # one builder at a time
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.build_hist = LatencyHistogram()
+        self.n_builds = 0
+
+    # -- read side ---------------------------------------------------------
+    def current(self) -> IndexGeneration:
+        """Atomic snapshot of the live generation (no lock needed)."""
+        return self._gen
+
+    @property
+    def latest_epoch(self) -> int:
+        return self._gen.epoch
+
+    # -- write side --------------------------------------------------------
+    def rebuild_once(self) -> IndexGeneration:
+        """Build the next generation from live state and publish it."""
+        with self._build_lock:
+            t0 = time.monotonic()
+            new_index = self._build_fn()
+            dt = time.monotonic() - t0
+            gen = IndexGeneration(self._gen.epoch + 1, new_index,
+                                  time.monotonic())
+            self._gen = gen                     # the atomic pointer swap
+            self.n_builds += 1
+            self.build_hist.record(dt)
+        if self._on_publish is not None:
+            self._on_publish(gen, dt)
+        return gen
+
+    # -- background builder ------------------------------------------------
+    def start_background(self, interval_s: float) -> None:
+        """Rebuild every ``interval_s`` on a daemon thread until stopped."""
+        if self._thread is not None:
+            raise RuntimeError("background rebuild already running")
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.wait(interval_s):
+                self.rebuild_once()
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="index-rebuild")
+        self._thread.start()
+
+    def stop_background(self, final_rebuild: bool = False) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+        if final_rebuild:
+            self.rebuild_once()

@@ -1,0 +1,185 @@
+"""Serving telemetry: lock-exact counters + log-spaced latency histograms.
+
+The paper serves its index under strict tail-latency limits (§3.4 /
+Appendix B: "scoring-then-ranking under heavy traffic"), so the
+benchmarkable quantity is p99, not the mean.  ``LatencyHistogram`` keeps
+log-spaced buckets (8 per decade from 1 us to ~17 min) with an internal
+lock, so concurrent recorders stay EXACT — after N threads record M
+samples each, ``count == N * M`` with no tolerance.  Percentiles are
+resolved to the bucket's upper edge (a conservative bound: the true
+quantile is <= the reported value, never above it).
+
+``ServeStats`` extends the PR-1 counter block with the histograms, the
+double-buffer generation/staleness counters (swap.py), and named
+per-stage histograms (queue wait, jit serve, index rebuild) so a single
+object answers "where does the tail come from?".
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+from typing import Dict, List, Optional
+
+
+class LatencyHistogram:
+    """Lock-exact latency histogram over log-spaced buckets.
+
+    Bucket 0 holds everything <= ``lo`` seconds; bucket i covers
+    (lo * growth^(i-1), lo * growth^i]; the last bucket is unbounded
+    above.  Exact count / sum / min / max ride along so the mean stays
+    exact even though quantiles are bucket-resolved.
+    """
+
+    def __init__(self, lo: float = 1e-6, growth: float = 10 ** 0.125,
+                 n_buckets: int = 72):
+        self.lo = lo
+        self.growth = growth
+        self._log_growth = math.log(growth)
+        self.counts: List[int] = [0] * n_buckets
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = 0.0
+        self._lock = threading.Lock()
+
+    # -- recording ---------------------------------------------------------
+    def bucket_of(self, seconds: float) -> int:
+        if seconds <= self.lo:
+            return 0
+        i = 1 + int(math.log(seconds / self.lo) / self._log_growth)
+        return min(i, len(self.counts) - 1)
+
+    def upper_edge(self, bucket: int) -> float:
+        return self.lo * self.growth ** bucket
+
+    def record(self, seconds: float) -> None:
+        seconds = max(float(seconds), 0.0)
+        b = self.bucket_of(seconds)
+        with self._lock:
+            self.counts[b] += 1
+            self.count += 1
+            self.sum += seconds
+            if seconds < self.min:
+                self.min = seconds
+            if seconds > self.max:
+                self.max = seconds
+
+    # -- reading -----------------------------------------------------------
+    def percentile(self, q: float) -> float:
+        """Upper edge of the bucket holding the q-quantile (0 < q <= 1)."""
+        with self._lock:
+            total = self.count
+            if total == 0:
+                return 0.0
+            rank = max(1, math.ceil(q * total))
+            acc = 0
+            for i, c in enumerate(self.counts):
+                acc += c
+                if acc >= rank:
+                    # clamp the edge to the exact max (tighter + finite
+                    # even when the sample hit the unbounded last bucket)
+                    return min(self.upper_edge(i), self.max)
+            return self.max                          # pragma: no cover
+
+    @property
+    def mean(self) -> float:
+        with self._lock:
+            return self.sum / self.count if self.count else 0.0
+
+    def merge(self, other: "LatencyHistogram") -> None:
+        """Fold ``other`` into self (matching bucket layout required)."""
+        if other is self:
+            raise ValueError("cannot merge a histogram into itself")
+        if (other.lo, other.growth, len(other.counts)) != \
+                (self.lo, self.growth, len(self.counts)):
+            raise ValueError("histogram bucket layouts differ")
+        # deterministic lock order (by object id) so concurrent
+        # a.merge(b) / b.merge(a) cannot ABBA-deadlock
+        first, second = sorted((self._lock, other._lock), key=id)
+        with first, second:
+            for i, c in enumerate(other.counts):
+                self.counts[i] += c
+            self.count += other.count
+            self.sum += other.sum
+            self.min = min(self.min, other.min)
+            self.max = max(self.max, other.max)
+
+    def to_dict(self) -> Dict[str, float]:
+        return dict(count=self.count, mean_ms=self.mean * 1e3,
+                    p50_ms=self.percentile(0.50) * 1e3,
+                    p95_ms=self.percentile(0.95) * 1e3,
+                    p99_ms=self.percentile(0.99) * 1e3,
+                    max_ms=(self.max if self.count else 0.0) * 1e3)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Counters (mutated under the owning service's lock -> exact) plus
+    self-locking latency histograms."""
+    n_requests: int = 0
+    n_batches: int = 0
+    total_latency_s: float = 0.0
+    index_rebuilds: int = 0
+    index_swaps: int = 0
+    # double-buffer lifecycle (swap.py)
+    generation: int = 0                 # epoch of the last index served
+    # serves whose response was returned after a NEWER generation had
+    # already been published (a rebuild overlapped the serve) — the
+    # rebuild/serve overlap metric, not an error
+    stale_serves: int = 0
+    # batched-serve latency (serve_batch wall time)
+    latency: LatencyHistogram = dataclasses.field(
+        default_factory=LatencyHistogram)
+    # per-stage histograms keyed by stage name ("queue_wait", "serve_jit",
+    # "rebuild", ...); created lazily via .stage()
+    stages: Dict[str, LatencyHistogram] = dataclasses.field(
+        default_factory=dict)
+    _stage_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False)
+
+    @property
+    def mean_latency_ms(self) -> float:
+        return 1e3 * self.total_latency_s / max(self.n_batches, 1)
+
+    @property
+    def p50_ms(self) -> float:
+        return self.latency.percentile(0.50) * 1e3
+
+    @property
+    def p95_ms(self) -> float:
+        return self.latency.percentile(0.95) * 1e3
+
+    @property
+    def p99_ms(self) -> float:
+        return self.latency.percentile(0.99) * 1e3
+
+    def reset_timings(self) -> None:
+        """Drop latency samples + throughput counters, keep lifecycle
+        counters (rebuilds/swaps/generation).  Benchmarks call this
+        after the compile warmup so p99 measures serving, not XLA."""
+        self.n_requests = 0
+        self.n_batches = 0
+        self.total_latency_s = 0.0
+        self.latency = LatencyHistogram()
+        with self._stage_lock:
+            self.stages.clear()
+
+    def stage(self, name: str) -> LatencyHistogram:
+        """Get-or-create the named per-stage histogram (thread-safe)."""
+        with self._stage_lock:
+            h = self.stages.get(name)
+            if h is None:
+                h = self.stages[name] = LatencyHistogram()
+            return h
+
+    def snapshot(self) -> Dict[str, object]:
+        """JSON-friendly view (benchmarks / dashboards)."""
+        return dict(
+            n_requests=self.n_requests, n_batches=self.n_batches,
+            mean_latency_ms=self.mean_latency_ms,
+            index_rebuilds=self.index_rebuilds,
+            index_swaps=self.index_swaps,
+            generation=self.generation, stale_serves=self.stale_serves,
+            latency=self.latency.to_dict(),
+            stages={k: v.to_dict() for k, v in sorted(self.stages.items())})

@@ -28,6 +28,19 @@ def shard(x: Any, spec: P) -> Any:
         x, NamedSharding(mesh, spec))
 
 
+def constrain(x: Any, mesh: Optional[Mesh], spec: P) -> Any:
+    """with_sharding_constraint against an EXPLICIT mesh.
+
+    Unlike ``shard`` this needs no ambient mesh context, so it works
+    from any thread (the serving path is multi-threaded and cannot rely
+    on the thread-local ``with mesh:`` scope).  ``mesh=None`` degrades
+    to identity.
+    """
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
 def batch_spec(mesh: Optional[Mesh]) -> P:
     """PartitionSpec for the batch axis: ('pod','data') when present."""
     if mesh is None:

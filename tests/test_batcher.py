@@ -1,0 +1,254 @@
+"""MicroBatcher semantics: flush triggers, bucketing, exact routing.
+
+The batcher is jax-free by contract (it only calls the injected
+``serve_fn``), so these tests drive it with a deterministic numpy echo
+function and can assert EXACT routing: every future gets precisely its
+own rows back, under concurrent producers, regardless of how flushes
+interleave.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving import MicroBatcher
+from repro.serving.batcher import default_buckets
+
+
+def _echo(batch, task):
+    """Deterministic per-row transform tagged with the task."""
+    return {"echo": batch["user_id"].astype(np.int64) * 10 + task,
+            "hist0": batch["hist"][:, 0]}
+
+
+def _req(lo, n, hist_len=4):
+    uid = np.arange(lo, lo + n, dtype=np.int32)
+    return dict(user_id=uid,
+                hist=np.tile(uid[:, None], (1, hist_len)).astype(np.int32))
+
+
+def test_flush_on_size():
+    """A full max_batch of queued rows flushes without waiting."""
+    calls = []
+
+    def serve(batch, task):
+        calls.append(len(batch["user_id"]))
+        return _echo(batch, task)
+
+    mb = MicroBatcher(serve, max_batch=8, max_delay_s=30.0)
+    try:
+        futs = [mb.submit(_req(4 * i, 4)) for i in range(2)]
+        for i, f in enumerate(futs):
+            np.testing.assert_array_equal(
+                f.result(timeout=5)["echo"],
+                np.arange(4 * i, 4 * i + 4) * 10)
+        assert mb.n_size_flushes == 1 and mb.n_deadline_flushes == 0
+        assert calls == [8]
+    finally:
+        mb.close()
+
+
+def test_flush_on_deadline():
+    """A lone sub-batch request is flushed once its deadline passes."""
+    mb = MicroBatcher(lambda b, t: _echo(b, t), max_batch=64,
+                      max_delay_s=0.03)
+    try:
+        t0 = time.monotonic()
+        fut = mb.submit(_req(0, 3))
+        out = fut.result(timeout=5)
+        waited = time.monotonic() - t0
+        np.testing.assert_array_equal(out["echo"], np.arange(3) * 10)
+        assert waited >= 0.02, waited    # deadline actually applied
+        assert mb.n_deadline_flushes == 1 and mb.n_size_flushes == 0
+        # padded up to the 4-bucket, 3 real rows served
+        assert mb.served_rows == 3 and mb.padded_rows == 1
+    finally:
+        mb.close()
+
+
+def test_bucketed_batch_shapes():
+    """Every flush shape is a declared bucket (no shape explosion)."""
+    shapes = set()
+
+    def serve(batch, task):
+        shapes.add(len(batch["user_id"]))
+        return _echo(batch, task)
+
+    mb = MicroBatcher(serve, max_batch=16, max_delay_s=0.005)
+    try:
+        futs = [mb.submit(_req(10 * i, 1 + (i % 5))) for i in range(17)]
+        for f in futs:
+            f.result(timeout=5)
+    finally:
+        mb.close()
+    assert shapes <= set(default_buckets(16)), shapes
+    assert mb.shapes_seen == shapes
+
+
+def test_task_groups_never_merge():
+    """Requests for different tasks never share a serve call."""
+    seen = []
+
+    def serve(batch, task):
+        seen.append((task, batch["user_id"].copy()))
+        return _echo(batch, task)
+
+    mb = MicroBatcher(serve, max_batch=8, max_delay_s=0.005)
+    try:
+        futs = [(i % 3, mb.submit(_req(100 * i, 2), task=i % 3))
+                for i in range(9)]
+        for t, f in futs:
+            out = f.result(timeout=5)
+            assert np.all(out["echo"] % 10 == t)
+    finally:
+        mb.close()
+    for task, uids in seen:
+        # every row in a flush belongs to requests of that one task:
+        # our request ids encode their submission index i = uid // 100,
+        # padding repeats row 0 of the same group
+        assert np.all((uids // 100) % 3 == task)
+
+
+def test_concurrent_producers_exact_routing():
+    """8 producer threads, random request sizes: exact results + counts."""
+    mb = MicroBatcher(lambda b, t: _echo(b, t), max_batch=32,
+                      max_delay_s=0.002)
+    n_threads, n_reqs = 8, 25
+    errors = []
+
+    def producer(tid):
+        rng = np.random.default_rng(tid)
+        try:
+            for i in range(n_reqs):
+                n = int(rng.integers(1, 7))
+                lo = tid * 100_000 + i * 100
+                fut = mb.submit(_req(lo, n), task=tid % 2)
+                out = fut.result(timeout=10)
+                np.testing.assert_array_equal(
+                    out["echo"], np.arange(lo, lo + n) * 10 + tid % 2)
+                np.testing.assert_array_equal(
+                    out["hist0"], np.arange(lo, lo + n))
+        except Exception as e:                     # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    mb.close()
+    assert not errors, errors
+    # lock-exact accounting: every submitted row was served exactly once
+    assert mb.stats.stage("queue_wait").count == n_threads * n_reqs
+    assert mb.n_flushes == mb.n_size_flushes + mb.n_deadline_flushes
+    expect_rows = 0
+    for tid in range(n_threads):        # replay each producer's rng draws
+        rng = np.random.default_rng(tid)
+        expect_rows += sum(int(rng.integers(1, 7)) for _ in range(n_reqs))
+    assert mb.served_rows == expect_rows
+    assert mb.stats.stage("batcher_flush").count == mb.n_flushes
+
+
+def test_oversized_request_rejected():
+    mb = MicroBatcher(lambda b, t: _echo(b, t), max_batch=4,
+                      max_delay_s=0.01)
+    try:
+        with pytest.raises(ValueError):
+            mb.submit(_req(0, 5))
+    finally:
+        mb.close()
+
+
+def test_close_drains_pending():
+    """close() serves what is still queued instead of dropping it."""
+    mb = MicroBatcher(lambda b, t: _echo(b, t), max_batch=64,
+                      max_delay_s=60.0)       # deadline never fires
+    futs = [mb.submit(_req(7 * i, 2)) for i in range(3)]
+    mb.close()
+    for i, f in enumerate(futs):
+        assert f.done()
+        np.testing.assert_array_equal(f.result(0)["echo"],
+                                      np.arange(7 * i, 7 * i + 2) * 10)
+
+
+def test_malformed_request_fails_futures_not_worker():
+    """A bad request in a flush errors ITS futures; the worker survives."""
+    mb = MicroBatcher(lambda b, t: _echo(b, t), max_batch=4,
+                      max_delay_s=0.5)
+    try:
+        # the 0.5 s deadline far exceeds the sub-ms submit gap, so both
+        # requests land in one size-triggered 4-row flush
+        bad = mb.submit(dict(user_id=np.arange(2, dtype=np.int32),
+                             hist=np.zeros((2, 9), np.int32)))
+        worse = mb.submit(dict(user_id=np.arange(2, dtype=np.int32),
+                               hist=np.zeros((2, 4), np.int32)))
+        with pytest.raises(ValueError):       # np.concatenate mismatch
+            bad.result(timeout=5)
+        with pytest.raises(ValueError):
+            worse.result(timeout=5)
+        # the worker is still alive and serves the next clean request
+        ok = mb.submit(_req(0, 2))
+        np.testing.assert_array_equal(ok.result(timeout=5)["echo"],
+                                      np.arange(2) * 10)
+    finally:
+        mb.close()
+
+
+def test_n_valid_passed_to_aware_serve_fn():
+    """serve fns accepting n_valid see real rows, not the padded bucket."""
+    seen = []
+
+    def serve(batch, task, n_valid=None):
+        seen.append((len(batch["user_id"]), n_valid))
+        return _echo(batch, task)
+
+    mb = MicroBatcher(serve, max_batch=16, max_delay_s=0.01)
+    try:
+        mb.submit(_req(0, 3)).result(timeout=5)
+    finally:
+        mb.close()
+    assert seen == [(4, 3)]      # padded to the 4-bucket, 3 real rows
+
+
+def test_service_n_requests_exact_through_batcher():
+    """stats.n_requests excludes bucket padding end to end."""
+    from repro.serving.telemetry import ServeStats
+
+    class _Svc:                               # minimal serve_batch shape
+        def __init__(self):
+            self.stats = ServeStats()
+
+        def serve_batch(self, batch, task=0, n_valid=None):
+            self.stats.n_batches += 1
+            self.stats.n_requests += (n_valid if n_valid is not None
+                                      else len(batch["user_id"]))
+            return _echo(batch, task)
+
+    svc = _Svc()
+    mb = MicroBatcher(svc.serve_batch, max_batch=16, max_delay_s=0.01,
+                      stats=svc.stats)
+    try:
+        futs = [mb.submit(_req(10 * i, 3)) for i in range(3)]
+        for f in futs:
+            f.result(timeout=5)
+    finally:
+        mb.close()
+    assert svc.stats.n_requests == 9         # 3 x 3 real rows, no padding
+
+
+def test_size_trigger_not_blocked_by_other_task():
+    """A full group flushes on size even while another task's lone
+    request is still aging toward its deadline (no head-of-line block)."""
+    mb = MicroBatcher(lambda b, t: _echo(b, t), max_batch=8,
+                      max_delay_s=5.0)
+    t0 = time.monotonic()
+    slow = mb.submit(_req(0, 1), task=0)       # waits for its deadline
+    futs = [mb.submit(_req(100 + 10 * i, 4), task=1) for i in range(2)]
+    for f in futs:                              # 8 rows = size trigger
+        f.result(timeout=2)                     # must NOT wait 5 s
+    assert time.monotonic() - t0 < 2.0
+    assert not slow.done()                      # task 0 still queued
+    mb.close()                                  # drain flushes task 0
+    np.testing.assert_array_equal(slow.result(0)["echo"], [0])

@@ -1,0 +1,151 @@
+"""Double-buffered index lifecycle + telemetry histograms.
+
+Epoch monotonicity has to survive a RACING background builder: readers
+poll ``current()`` while rebuilds publish, and must never observe an
+epoch going backwards nor a generation whose payload disagrees with its
+epoch tag.  Histogram counters must stay exact (not approximate) under
+concurrent recorders — that is the "lock-exact" part of the ROADMAP p99
+item.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving import DoubleBufferedIndex, LatencyHistogram, ServeStats
+
+
+# ---------------------------------------------------------------------------
+# LatencyHistogram
+# ---------------------------------------------------------------------------
+
+def test_histogram_percentile_bounds():
+    h = LatencyHistogram()
+    samples = [0.001, 0.001, 0.002, 0.003, 0.005, 0.008, 0.1]
+    for s in samples:
+        h.record(s)
+    assert h.count == len(samples)
+    np.testing.assert_allclose(h.mean, np.mean(samples))
+    # bucket-resolved quantile: true quantile <= reported <= growth * true
+    for q in (0.5, 0.95, 0.99):
+        true = np.quantile(samples, q, method="inverted_cdf")
+        got = h.percentile(q)
+        assert true <= got <= true * h.growth + 1e-12, (q, true, got)
+    # p100 equals the exact max (clamped edge)
+    assert h.percentile(1.0) == max(samples)
+
+
+def test_histogram_empty_and_tiny():
+    h = LatencyHistogram()
+    assert h.percentile(0.99) == 0.0 and h.mean == 0.0
+    h.record(0.0)                         # below the lowest edge
+    assert h.count == 1
+    assert h.percentile(0.5) == 0.0      # clamped to exact max
+
+
+def test_histogram_concurrent_exact():
+    h = LatencyHistogram()
+    n_threads, n_each = 8, 2000
+
+    def rec(tid):
+        rng = np.random.default_rng(tid)
+        for _ in range(n_each):
+            h.record(float(rng.uniform(1e-5, 1e-2)))
+
+    ts = [threading.Thread(target=rec, args=(t,)) for t in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert h.count == n_threads * n_each          # exact, no tolerance
+    assert sum(h.counts) == h.count
+
+
+def test_histogram_merge():
+    a, b = LatencyHistogram(), LatencyHistogram()
+    for s in (0.001, 0.004):
+        a.record(s)
+    for s in (0.002, 0.5):
+        b.record(s)
+    a.merge(b)
+    assert a.count == 4
+    assert a.max == 0.5 and a.min == 0.001
+    with pytest.raises(ValueError):
+        a.merge(LatencyHistogram(lo=1e-3))
+
+
+def test_serve_stats_snapshot_and_stages():
+    st = ServeStats()
+    st.latency.record(0.01)
+    st.stage("serve_jit").record(0.008)
+    st.stage("serve_jit").record(0.009)
+    snap = st.snapshot()
+    assert snap["latency"]["count"] == 1
+    assert snap["stages"]["serve_jit"]["count"] == 2
+    assert st.p99_ms >= st.p50_ms > 0
+
+
+# ---------------------------------------------------------------------------
+# DoubleBufferedIndex
+# ---------------------------------------------------------------------------
+
+def test_epochs_monotone_under_background_rebuild():
+    """Readers never see the epoch move backwards, and every generation's
+    payload matches its epoch tag (the builder tags payload == epoch)."""
+    built = {"n": 0}
+
+    def build():
+        built["n"] += 1
+        time.sleep(0.001)                  # widen the publish race window
+        return built["n"]
+
+    buf = DoubleBufferedIndex(build, 0)
+    stop = threading.Event()
+    errors = []
+
+    def reader():
+        last = -1
+        try:
+            while not stop.is_set():
+                gen = buf.current()
+                assert gen.epoch >= last, (gen.epoch, last)
+                # atomic pair: payload was built for exactly this epoch
+                assert gen.index == gen.epoch, gen
+                last = gen.epoch
+        except Exception as e:             # pragma: no cover
+            errors.append(e)
+
+    readers = [threading.Thread(target=reader) for _ in range(4)]
+    for t in readers:
+        t.start()
+    buf.start_background(interval_s=0.0005)
+    deadline = time.monotonic() + 2.0
+    while buf.latest_epoch < 20 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    buf.stop_background()
+    stop.set()
+    for t in readers:
+        t.join()
+    assert not errors, errors
+    assert buf.latest_epoch >= 20
+    assert buf.n_builds == buf.latest_epoch       # one publish per build
+    assert buf.build_hist.count == buf.n_builds
+
+
+def test_foreground_and_background_builders_serialize():
+    """rebuild_once during background operation stays epoch-consistent."""
+    def build():
+        time.sleep(0.001)
+        return object()
+
+    buf = DoubleBufferedIndex(build, None)
+    buf.start_background(interval_s=0.001)
+    for _ in range(10):
+        buf.rebuild_once()
+    buf.stop_background()
+    assert buf.latest_epoch == buf.n_builds >= 10
+    with pytest.raises(RuntimeError):
+        buf.start_background(0.001)                # guard double-start
+        buf.start_background(0.001)
+    buf.stop_background()
