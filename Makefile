@@ -1,11 +1,11 @@
 # Repo entry points (tier-1 verify + benchmarks).
-.PHONY: test test-fast bench bench-serving
+.PHONY: test test-fast bench bench-serving bench-freshness
 
 test:           ## full tier-1 suite incl. multi-device tier (what CI runs)
 	./scripts/test.sh
 
 test-fast:      ## tier-1 minus tests marked slow (single invocation)
-	./scripts/test.sh -m 'not slow'
+	PYTHONPATH=src python -m pytest -q -m 'not slow'
 
 bench:          ## paper-table benchmark harness
 	PYTHONPATH=src python -m benchmarks.run
@@ -13,3 +13,6 @@ bench:          ## paper-table benchmark harness
 bench-serving:  ## serving throughput + p99 table (8 host-platform devices)
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	  PYTHONPATH=src python -m benchmarks.run --only serving
+
+bench-freshness: ## index-immediacy freshness table (BENCH_freshness.json)
+	PYTHONPATH=src python -m benchmarks.run --only freshness

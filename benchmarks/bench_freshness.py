@@ -1,0 +1,175 @@
+"""Index freshness benchmark — delta publication vs rebuild cadence.
+
+Freshness = the time from an assignment update (the train-step PS
+write, ``DeltaBatch.t_assign``) to the instant the item was first
+retrievable from the live index — the measurable form of the paper's
+"index immediacy" claim (§3.1).  Two publication strategies over the
+SAME trained retriever and the SAME write sequence:
+
+  baseline  deferred deltas + the double-buffered background rebuild at
+            a fixed interval: a write becomes retrievable only when the
+            next generation publishes, so freshness ~ U(0, interval) +
+            build time and the p99 approaches the full interval;
+  delta     immediate ``apply_deltas`` into the live index's spare
+            capacity under the publish lock: freshness is the apply
+            latency itself, independent of the rebuild cadence.
+
+Results land in ``BENCH_freshness.json``:
+
+  backend, device_count        jax platform of the run
+  shape                        write cadence / batch size / rebuild
+                               interval / delta_spare used
+  rows.baseline, rows.delta    freshness histograms (count + mean/p50/
+                               p95/p99/max in ms) + service snapshot
+  rows.speedup_p99             baseline p99 / delta p99 (x)
+  rows.p99_gain_10x            True when the delta path is >= 10x
+  rows.retrievable_one_apply   a freshly written item was served with
+                               NO rebuild between write and serve
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import trained_retriever
+from repro.core import assignment_store as astore
+from repro.core.freq_estimator import hash_ids
+from repro.serving import RetrievalService, extract_deltas
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_freshness.json")
+N_WRITES = 40                  # delta batches per phase
+WRITE_EVERY_S = 0.01
+BATCH_ITEMS = 4
+REBUILD_INTERVAL_S = 0.3       # baseline publication cadence
+DELTA_SPARE = 64
+
+
+def _write_once(rng, svc, cfg, n):
+    """One synthetic train-step write against the service's live store."""
+    prev = svc.store_snapshot()
+    ids = rng.integers(0, cfg.n_items, n).astype(np.int32)
+    new_store = astore.write(
+        prev, jnp.asarray(ids),
+        jnp.asarray(rng.integers(0, cfg.n_clusters, n), jnp.int32),
+        jnp.asarray(rng.normal(size=(n, cfg.embed_dim)), jnp.float32),
+        jnp.asarray(rng.normal(size=n), jnp.float32))
+    return extract_deltas(prev, new_store, jnp.asarray(ids))
+
+
+def _drive_writes(svc, cfg, seed, immediate):
+    rng = np.random.default_rng(seed)
+    for _ in range(N_WRITES):
+        svc.apply_deltas(_write_once(rng, svc, cfg, BATCH_ITEMS),
+                         immediate=immediate)
+        time.sleep(WRITE_EVERY_S)
+
+
+def _immediacy_check(tr, batch):
+    """A cloned hot item under a fresh id is served right after ONE
+    apply_deltas, with zero rebuilds in between."""
+    cfg = tr.cfg
+    svc = RetrievalService(cfg, tr.params, tr.index,
+                           delta_spare=DELTA_SPARE)
+    out = svc.serve_batch(batch)
+    donor = int(np.asarray(out["item_ids"])[np.asarray(out["valid"])][0])
+    prev = svc.store_snapshot()
+    slot = int(np.asarray(hash_ids(jnp.asarray([donor], jnp.int32),
+                                   prev.capacity))[0])
+    new_id = cfg.n_items - 1 if donor != cfg.n_items - 1 else cfg.n_items - 2
+    new_store = astore.write(
+        prev, jnp.asarray([new_id], jnp.int32),
+        prev.cluster[jnp.asarray([slot])],
+        prev.item_emb[jnp.asarray([slot])],
+        jnp.asarray([1e6], jnp.float32))
+    rebuilds0 = svc.stats.index_rebuilds
+    svc.apply_deltas(extract_deltas(prev, new_store,
+                                    jnp.asarray([new_id], jnp.int32)))
+    got = np.asarray(svc.serve_batch(batch)["index_ids"])
+    return bool((got == new_id).any()
+                and svc.stats.index_rebuilds == rebuilds0)
+
+
+def run() -> list:
+    tr = trained_retriever()
+    cfg = tr.cfg
+    users = np.arange(32) % cfg.n_users
+    batch = dict(user_id=users.astype(np.int32),
+                 hist=tr.stream.user_hist[users].astype(np.int32))
+    rows = []
+    record = {"backend": jax.default_backend(),
+              "device_count": jax.device_count(),
+              "shape": dict(n_writes=N_WRITES, batch_items=BATCH_ITEMS,
+                            write_every_s=WRITE_EVERY_S,
+                            rebuild_interval_s=REBUILD_INTERVAL_S,
+                            delta_spare=DELTA_SPARE,
+                            n_clusters=cfg.n_clusters),
+              "rows": {}}
+
+    # ---- baseline: deferred deltas, rebuild-interval publication -------
+    svc_base = RetrievalService(cfg, tr.params, tr.index, delta_spare=0)
+    svc_base.serve_batch(batch)            # compile outside the window
+    svc_base.stats.reset_timings()
+    svc_base.start_auto_rebuild(REBUILD_INTERVAL_S)
+    _drive_writes(svc_base, cfg, seed=31, immediate=False)
+    svc_base.stop_auto_rebuild()
+    svc_base.rebuild_index()               # flush the unpublished tail
+    base = svc_base.stats.freshness
+
+    # ---- delta path: immediate publication into spare capacity ---------
+    svc_delta = RetrievalService(cfg, tr.params, tr.index,
+                                 delta_spare=DELTA_SPARE)
+    svc_delta.serve_batch(batch)
+    svc_delta.stats.reset_timings()
+    _drive_writes(svc_delta, cfg, seed=31, immediate=True)
+    delta = svc_delta.stats.freshness
+
+    # delta-path consistency: the live index serves exactly like a fresh
+    # rebuild over the same (updated) store
+    live = svc_delta.serve_batch(batch)
+    svc_delta.rebuild_index()
+    rebuilt = svc_delta.serve_batch(batch)
+    parity = all(np.array_equal(live[k], rebuilt[k]) for k in live)
+
+    speedup = (base.percentile(0.99) / delta.percentile(0.99)
+               if delta.percentile(0.99) > 0 else float("inf"))
+    one_apply = _immediacy_check(tr, batch)
+
+    for name, h in (("baseline", base), ("delta", delta)):
+        rows.append((f"freshness/{name}",
+                     None,
+                     f"p50={h.percentile(0.5) * 1e3:.1f}ms "
+                     f"p99={h.percentile(0.99) * 1e3:.1f}ms "
+                     f"n={h.count}"))
+    rows.append(("freshness/speedup_p99", None, f"{speedup:.1f}x"))
+    rows.append(("freshness/live_vs_rebuild_parity", None, parity))
+    rows.append(("freshness/retrievable_one_apply", None, one_apply))
+
+    record["rows"]["baseline"] = dict(
+        freshness=base.to_dict(),
+        compactions=svc_base.stats.delta_compactions,
+        rebuilds=svc_base.stats.index_rebuilds)
+    record["rows"]["delta"] = dict(
+        freshness=delta.to_dict(),
+        applies=svc_delta.stats.delta_applies,
+        items=svc_delta.stats.delta_items,
+        compactions=svc_delta.stats.delta_compactions)
+    record["rows"]["speedup_p99"] = round(speedup, 1)
+    record["rows"]["p99_gain_10x"] = bool(speedup >= 10.0)
+    record["rows"]["live_vs_rebuild_parity"] = bool(parity)
+    record["rows"]["retrievable_one_apply"] = bool(one_apply)
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

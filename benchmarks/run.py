@@ -18,6 +18,7 @@ MODULES = [
     ("merge_sort", "benchmarks.bench_merge_sort"),    # §3.4 / Alg. 1
     ("kernels", "benchmarks.bench_kernels"),          # kernel layer
     ("serving", "benchmarks.bench_serving"),          # §3.4 / Appendix B
+    ("freshness", "benchmarks.bench_freshness"),      # §3.1 immediacy
 ]
 
 

@@ -6,17 +6,40 @@
 #   scripts/test.sh tests/test_merge_serve.py   # any pytest args pass through
 #
 # With explicit args, runs a single pytest invocation (passthrough).
-# With no args, runs the full suite and then re-runs the sharded-serving
-# tests in a SEPARATE process with 8 forced host-platform devices, so
-# the cross-shard mesh path is exercised over real device boundaries
-# (XLA_FLAGS must be set before jax initializes, hence the new process).
-set -euo pipefail
+# With no args, runs every tier and exits NONZERO if ANY tier failed
+# (tiers do not early-exit each other, so one red tier still surfaces
+# the other tiers' results):
+#   tier-1          the full single-device suite
+#   multi-device    a SEPARATE process with 8 forced host-platform
+#                   devices (XLA_FLAGS must be set before jax
+#                   initializes, hence the new process) re-running the
+#                   suites whose assertions cross real device
+#                   boundaries: sharded serving, the async batcher,
+#                   double-buffer swaps, and incremental deltas over
+#                   the ("shard",) mesh.
+set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [ "$#" -gt 0 ]; then
   exec python -m pytest -x -q "$@"
 fi
-python -m pytest -x -q
-echo "[tier-1] multi-device tier (8 host-platform devices)"
+
+failures=0
+
+echo "[tier-1] full suite (single device)"
+python -m pytest -x -q || { failures=$((failures + 1)); echo "[tier-1] FAILED"; }
+
+echo "[tier-2] multi-device tier (8 host-platform devices)"
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
-  python -m pytest -x -q tests/test_sharded_serving.py
+  python -m pytest -x -q \
+    tests/test_sharded_serving.py \
+    tests/test_batcher.py \
+    tests/test_swap_telemetry.py \
+    tests/test_deltas.py \
+  || { failures=$((failures + 1)); echo "[tier-2] FAILED"; }
+
+if [ "$failures" -ne 0 ]; then
+  echo "[test.sh] $failures tier(s) failed"
+  exit 1
+fi
+echo "[test.sh] all tiers green"

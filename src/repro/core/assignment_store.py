@@ -74,12 +74,22 @@ class ServingIndex(NamedTuple):
     Items inside a cluster are sorted by descending popularity bias, which
     is exactly the pre-sorted per-cluster list the merge-sort serving
     stage (Alg. 1) consumes.
+
+    Tombstone-aware contract: a cluster's segment occupies
+    ``[offsets[c], offsets[c+1])`` but only its first ``counts[c]`` slots
+    are LIVE; the rest is spare capacity holding the constant sentinel
+    payload (id -1, bias 0).  With ``spare_per_cluster=0`` (the default
+    build) ``counts[c] == offsets[c+1] - offsets[c]`` and the layout is
+    bit-identical to the pre-delta dense one.  Spare capacity is what the
+    incremental delta path (serving/deltas.py) appends into, and a
+    tombstone is a slot compacted out of the live prefix.
     """
-    item_ids: jax.Array      # (n,) int32
+    item_ids: jax.Array      # (n,) int32, -1 in spare / sentinel slots
     item_emb: jax.Array      # (n, d)
-    item_bias: jax.Array     # (n,) sorted desc within each segment
-    cluster_of: jax.Array    # (n,) int32
-    offsets: jax.Array       # (K+1,) int32 segment starts
+    item_bias: jax.Array     # (n,) sorted desc within each live prefix
+    cluster_of: jax.Array    # (n,) int32 (n_clusters in non-live slots)
+    offsets: jax.Array       # (K+1,) int32 segment starts (incl. spare)
+    counts: jax.Array        # (K,) int32 live items per segment
 
     @property
     def n_items(self) -> int:
@@ -87,7 +97,8 @@ class ServingIndex(NamedTuple):
 
 
 def build_serving_index(store: AssignmentStore, n_clusters: int,
-                        use_kernel: bool = False) -> ServingIndex:
+                        use_kernel: bool = False,
+                        spare_per_cluster: int = 0) -> ServingIndex:
     """Sort occupied slots by (cluster asc, bias desc) -> segments.
 
     Empty slots (cluster == -1) sort to the end of a sentinel segment and
@@ -101,6 +112,13 @@ def build_serving_index(store: AssignmentStore, n_clusters: int,
     the sorted cluster ids (O(K log N) instead of an O(N) segment-sum);
     the default is the ``kernels/ref.index_sort_ref`` lexsort oracle.
     Both produce bit-identical indexes.
+
+    ``spare_per_cluster > 0`` spreads the segments apart so every cluster
+    owns that many sentinel spare slots after its live prefix (the
+    delta-append headroom); total layout size grows by K * spare and the
+    empty-slot sentinel tail moves to the very end.  Serving reads only
+    live prefixes (via ``counts``), so outputs are bit-identical across
+    spare settings.
     """
     occupied = store.cluster >= 0
     cl = jnp.where(occupied, store.cluster, n_clusters)
@@ -118,12 +136,37 @@ def build_serving_index(store: AssignmentStore, n_clusters: int,
             jnp.ones_like(cl_sorted, jnp.int32), cl_sorted, n_clusters + 1)
         offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
                                    jnp.cumsum(counts[:n_clusters])])
-    return ServingIndex(
-        item_ids=store.item_id[order],
-        item_emb=store.item_emb[order],
-        item_bias=store.item_bias[order],
-        cluster_of=cl_sorted.astype(jnp.int32),
-        offsets=offsets.astype(jnp.int32))
+    offsets = offsets.astype(jnp.int32)
+    live_counts = (offsets[1:] - offsets[:-1]).astype(jnp.int32)
+    ids_s = store.item_id[order]
+    emb_s = store.item_emb[order]
+    bias_s = store.item_bias[order]
+    cl_sorted = cl_sorted.astype(jnp.int32)
+    if spare_per_cluster == 0:
+        return ServingIndex(item_ids=ids_s, item_emb=emb_s,
+                            item_bias=bias_s, cluster_of=cl_sorted,
+                            offsets=offsets, counts=live_counts)
+    # Spread segments: sorted position i moves to i + cluster_i * spare.
+    # Positions are strictly increasing (cl_sorted is non-decreasing), so
+    # the scatter is a permutation into a larger sentinel-initialized
+    # buffer; the empty-slot tail (sentinel cluster K) lands after the
+    # last spare gap.
+    n = ids_s.shape[0]
+    spare = int(spare_per_cluster)
+    total = n + n_clusters * spare
+    newpos = jnp.arange(n, dtype=jnp.int32) \
+        + jnp.minimum(cl_sorted, n_clusters) * jnp.int32(spare)
+    ids_sp = jnp.full((total,), -1, jnp.int32).at[newpos].set(ids_s)
+    bias_sp = jnp.zeros((total,), bias_s.dtype).at[newpos].set(bias_s)
+    emb_sp = jnp.zeros((total, emb_s.shape[1]),
+                       emb_s.dtype).at[newpos].set(emb_s)
+    clof_sp = jnp.full((total,), n_clusters,
+                       jnp.int32).at[newpos].set(cl_sorted)
+    offsets_sp = offsets + jnp.arange(n_clusters + 1,
+                                      dtype=jnp.int32) * jnp.int32(spare)
+    return ServingIndex(item_ids=ids_sp, item_emb=emb_sp,
+                        item_bias=bias_sp, cluster_of=clof_sp,
+                        offsets=offsets_sp, counts=live_counts)
 
 
 def collision_rate(store: AssignmentStore, ids: jax.Array) -> jax.Array:

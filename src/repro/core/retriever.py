@@ -276,7 +276,7 @@ def serve(params: Params, state: IndexState, cfg: SVQConfig,
                                              cfg.clusters_per_query,
                                              use_kernel=use_kernel)
     starts = index.offsets[top_clusters]                     # (B, C)
-    counts = index.offsets[top_clusters + 1] - starts
+    counts = index.counts[top_clusters]       # live prefix (tombstone-aware)
     L = items_per_cluster
     slab = starts[..., None] + jnp.arange(L)[None, None, :]  # (B, C, L)
     slab = jnp.minimum(slab, index.n_items - 1)

@@ -15,10 +15,19 @@ File -> paper-section map:
   batcher.py    Async micro-batching request router: multiplexes the
                 per-user request stream ("heavy traffic", §1) into
                 fixed-bucket jitted serve calls under a deadline bound.
+  deltas.py     Incremental delta publication: per-item (re)assignment
+                deltas applied straight into the LIVE index (slab append
+                into spare capacity + tombstone of the stale slot) with
+                a monotonically versioned DeltaLog — the serving-side
+                completion of the §3.1 "index immediacy" property.
   telemetry.py  Lock-exact counters + log-spaced latency histograms:
                 makes the serve_p99 shape of Appendix B benchmarkable.
 """
 from repro.serving.batcher import MicroBatcher, ServeFuture
+from repro.serving.deltas import (DeltaBatch, DeltaLog,
+                                  SpareCapacityExceeded, apply_deltas,
+                                  apply_deltas_sharded, extract_deltas,
+                                  np_hash_ids, write_back)
 from repro.serving.service import RetrievalService, drive_requests
 from repro.serving.sharding import (ShardedServingIndex,
                                     place_sharded_index,

@@ -1,0 +1,356 @@
+"""Incremental delta publication: per-item (re)assignment deltas applied
+straight into the LIVE serving index.
+
+This is the missing half of the paper's "index immediacy" claim (§3.1):
+the assignment PS is updated in the same jitted train step, but until
+now the *serving* index only advanced via full double-buffered rebuilds
+(~seconds), so a (re)assigned item was not retrievable until the next
+generation.  Deltas close that gap:
+
+  train step  ──writes──▶  AssignmentStore        (same-step, on device)
+       │
+       └─emit─▶  DeltaBatch  ──apply──▶  live ServingIndex /
+                     │                   ShardedServingIndex
+                     └──────▶  DeltaLog  (monotone versions)
+
+A delta batch is extracted from a store transition
+(``extract_deltas``): for every written slot it carries the evicted
+occupant (tombstone) and the new occupant (append).  Application is a
+per-cluster-segment edit on the Appendix-B layout built with
+``spare_per_cluster > 0``:
+
+  tombstone  the stale item is compacted out of its old cluster's live
+             prefix (shift-left inside the segment; the vacated slot
+             returns to spare capacity as the constant sentinel),
+  append     the new item is inserted into its cluster's live prefix at
+             the exact position a full rebuild would give it — bias
+             descending, NaN biases last, ties (including +/-0.0, which
+             compare equal) broken by ascending store slot, mirroring
+             the stable ``kernels/ref.index_sort_ref`` lexsort — so the
+             live index and a batch rebuild of the updated store hold
+             IDENTICAL per-cluster item lists, which makes serve()
+             outputs over the two indexes bit-equal (set-equality of
+             retrieved items is the paper-level contract; order-exact
+             segments are the stronger invariant we maintain).
+
+When a cluster's spare capacity is exhausted, ``SpareCapacityExceeded``
+aborts the batch (the live index is left untouched) and the owner falls
+back to a forced compaction: a synchronous rebuild from the store, which
+already contains the write.  Background rebuilds compact implicitly —
+``DeltaLog`` versions are monotone, every applied batch is logged, and a
+rebuild publication truncates the log up to the store version its
+snapshot covered while replaying the (few) deltas that arrived during
+the build window (see ``RetrievalService._reconcile``).
+
+Readers always see a consistent snapshot: an apply never mutates the
+published arrays — it produces a fresh index tuple that is swapped in
+atomically via ``DoubleBufferedIndex.mutate`` under the same short
+publish lock rebuild publication uses.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import assignment_store as astore
+from repro.core.freq_estimator import hash_ids
+from repro.serving.sharding import ShardedServingIndex
+
+
+class SpareCapacityExceeded(RuntimeError):
+    """A cluster segment has no spare slot left for an append; the
+    caller must fall back to a forced compaction (full rebuild)."""
+
+    def __init__(self, cluster: int):
+        super().__init__(f"cluster {cluster} spare capacity exhausted")
+        self.cluster = cluster
+
+
+def np_hash_ids(ids: np.ndarray, capacity: int) -> np.ndarray:
+    """Host mirror of ``freq_estimator.hash_ids`` (bit-identical)."""
+    with np.errstate(over="ignore"):
+        h = ids.astype(np.uint32) * np.uint32(2654435761)
+        h = h ^ (h >> np.uint32(16))
+        return (h % np.uint32(capacity)).astype(np.int32)
+
+
+class DeltaBatch(NamedTuple):
+    """One train step's worth of (re)assignment deltas (host arrays).
+
+    Each row describes one store SLOT transition: the occupant evicted
+    from the slot (tombstone side; ``old_id == -1`` when the slot was
+    empty) and the occupant now living there (append side;
+    ``new_id == -1`` never happens for train writes but is tolerated as
+    a pure delete).  Hash collisions are therefore handled exactly: the
+    evicted item may be a *different* item than the written one.
+    """
+    slot: np.ndarray          # (n,) int32 store slot (unique within batch)
+    old_id: np.ndarray        # (n,) int32 evicted item id, -1 = none
+    old_cluster: np.ndarray   # (n,) int32 its cluster, -1 = none
+    new_id: np.ndarray        # (n,) int32 new item id, -1 = delete
+    new_cluster: np.ndarray   # (n,) int32 its cluster, -1 = unassigned
+    emb: np.ndarray           # (n, d) float32 new personality embedding
+    bias: np.ndarray          # (n,) float32 new popularity bias
+    t_assign: float           # time.monotonic() when assignments landed
+
+    @property
+    def n(self) -> int:
+        return int(self.slot.shape[0])
+
+
+def extract_deltas(prev_store: astore.AssignmentStore,
+                   new_store: astore.AssignmentStore,
+                   ids: jax.Array,
+                   t_assign: Optional[float] = None) -> DeltaBatch:
+    """Diff the written slots of a store transition into a DeltaBatch.
+
+    ``prev_store`` is the store the live index currently reflects (the
+    serving side's snapshot), ``new_store`` the post-write store, and
+    ``ids`` the item ids the step wrote.  Duplicate ids / colliding
+    slots dedupe to one row per slot, with ``new_store`` as the
+    authority for what finally occupies it — exactly the scatter-last
+    semantics of ``assignment_store.write``.
+    """
+    slots = np.asarray(hash_ids(jnp.asarray(ids, jnp.int32),
+                                prev_store.capacity))
+    uniq = np.unique(slots.reshape(-1))
+    js = jnp.asarray(uniq, jnp.int32)
+    old_id, old_cl, new_id, new_cl, emb, bias = jax.device_get((
+        prev_store.item_id[js], prev_store.cluster[js],
+        new_store.item_id[js], new_store.cluster[js],
+        new_store.item_emb[js], new_store.item_bias[js]))
+    return DeltaBatch(
+        slot=uniq.astype(np.int32),
+        old_id=np.asarray(old_id, np.int32),
+        old_cluster=np.asarray(old_cl, np.int32),
+        new_id=np.asarray(new_id, np.int32),
+        new_cluster=np.asarray(new_cl, np.int32),
+        emb=np.asarray(emb, np.float32),
+        bias=np.asarray(bias, np.float32),
+        t_assign=time.monotonic() if t_assign is None else t_assign)
+
+
+def write_back(store: astore.AssignmentStore,
+               batch: DeltaBatch) -> astore.AssignmentStore:
+    """Mirror a DeltaBatch into an AssignmentStore (the serving side's
+    shadow PS), so rebuilds from that store cover every applied delta."""
+    keep = batch.new_id >= 0
+    if not keep.any():
+        return store
+    return astore.write(store,
+                        jnp.asarray(batch.new_id, jnp.int32),
+                        jnp.asarray(batch.new_cluster, jnp.int32),
+                        jnp.asarray(batch.emb, jnp.float32),
+                        jnp.asarray(batch.bias, jnp.float32),
+                        valid=jnp.asarray(keep))
+
+
+# ---------------------------------------------------------------------------
+# Per-segment edits (numpy, in place on host copies)
+# ---------------------------------------------------------------------------
+
+def _segment_remove(ids: np.ndarray, bias: np.ndarray,
+                    emb: Optional[np.ndarray], clof: Optional[np.ndarray],
+                    start: int, count: int, item_id: int,
+                    sentinel_cluster: int) -> int:
+    """Compact ``item_id`` out of the live prefix [start, start+count)."""
+    seg = ids[start:start + count]
+    hit = np.nonzero(seg == item_id)[0]
+    if hit.size == 0:
+        return count                       # not present (already evicted)
+    p = start + int(hit[0])
+    last = start + count - 1
+    ids[p:last] = ids[p + 1:last + 1].copy()
+    bias[p:last] = bias[p + 1:last + 1].copy()
+    if emb is not None:
+        emb[p:last] = emb[p + 1:last + 1].copy()
+    ids[last] = -1
+    bias[last] = 0.0
+    if emb is not None:
+        emb[last] = 0.0
+    if clof is not None:
+        clof[last] = sentinel_cluster      # slot returns to spare
+    return count - 1
+
+
+def _segment_insert(ids: np.ndarray, bias: np.ndarray,
+                    emb: Optional[np.ndarray], clof: Optional[np.ndarray],
+                    start: int, count: int, cap: int,
+                    item_id: int, item_bias: float,
+                    item_emb: Optional[np.ndarray], slot: int,
+                    store_capacity: int, cluster: int) -> int:
+    """Sorted-insert into the live prefix at the exact rebuild position.
+
+    Order inside a segment is (bias desc, NaN last, store-slot asc) —
+    the stable-lexsort order ``build_serving_index`` produces, so ties
+    (including mixed +/-0.0, which compare IEEE-equal) land where a full
+    rebuild would put them.
+    """
+    if count >= cap:
+        raise SpareCapacityExceeded(cluster)
+    seg_bias = bias[start:start + count]
+    seg_slots = np_hash_ids(ids[start:start + count], store_capacity)
+    eb_nan = np.isnan(seg_bias)
+    if np.isnan(item_bias):
+        precede = ~eb_nan | (eb_nan & (seg_slots < slot))
+    else:
+        precede = (seg_bias > item_bias) \
+            | ((seg_bias == item_bias) & (seg_slots < slot))
+    p = start + int(np.count_nonzero(precede))
+    end = start + count
+    ids[p + 1:end + 1] = ids[p:end].copy()
+    bias[p + 1:end + 1] = bias[p:end].copy()
+    if emb is not None:
+        emb[p + 1:end + 1] = emb[p:end].copy()
+        emb[p] = item_emb
+    ids[p] = item_id
+    bias[p] = item_bias
+    if clof is not None:
+        clof[end] = cluster                # prefix grew into one spare slot
+    return count + 1
+
+
+# ---------------------------------------------------------------------------
+# Whole-index application
+# ---------------------------------------------------------------------------
+
+def apply_deltas(index: astore.ServingIndex, batch: DeltaBatch,
+                 n_clusters: int,
+                 store_capacity: int) -> astore.ServingIndex:
+    """Apply a DeltaBatch to a (single-device) ServingIndex.
+
+    Pure: returns a fresh index; the input arrays are never mutated, so
+    concurrent readers of the published index stay consistent.  Raises
+    ``SpareCapacityExceeded`` (input untouched) when an append finds no
+    spare slot.
+    """
+    ids = np.array(index.item_ids)
+    bias = np.array(index.item_bias)
+    emb = np.array(index.item_emb)
+    clof = np.array(index.cluster_of)
+    offs = np.asarray(index.offsets)
+    counts = np.array(index.counts)
+    for i in range(batch.n):
+        oc, nc = int(batch.old_cluster[i]), int(batch.new_cluster[i])
+        oid, nid = int(batch.old_id[i]), int(batch.new_id[i])
+        if oid >= 0 and 0 <= oc < n_clusters:
+            counts[oc] = _segment_remove(
+                ids, bias, emb, clof, int(offs[oc]), int(counts[oc]),
+                oid, n_clusters)
+        if nid >= 0 and 0 <= nc < n_clusters:
+            cap = int(offs[nc + 1] - offs[nc])
+            counts[nc] = _segment_insert(
+                ids, bias, emb, clof, int(offs[nc]), int(counts[nc]),
+                cap, nid, float(batch.bias[i]), batch.emb[i],
+                int(batch.slot[i]), store_capacity, nc)
+    return index._replace(item_ids=jnp.asarray(ids),
+                          item_bias=jnp.asarray(bias),
+                          item_emb=jnp.asarray(emb),
+                          cluster_of=jnp.asarray(clof),
+                          counts=jnp.asarray(counts))
+
+
+def apply_deltas_sharded(sidx: ShardedServingIndex, batch: DeltaBatch,
+                         n_clusters: int, store_capacity: int,
+                         mesh=None) -> ShardedServingIndex:
+    """Apply a DeltaBatch to a live ShardedServingIndex.
+
+    Deltas are ROUTED to the owning shard (cluster-major: cluster c
+    lives on shard c // Ks) and applied inside that shard's local
+    segment only — a tombstone + append pair whose clusters live on
+    different shards touches exactly those two shard rows.  With a mesh,
+    the updated rows are re-committed to their devices.
+    """
+    D = sidx.n_shards
+    ks = sidx.clusters_per_shard
+    ids = np.array(sidx.item_ids)
+    bias = np.array(sidx.item_bias)
+    offs = np.asarray(sidx.offsets)
+    counts = np.array(sidx.counts)
+    for i in range(batch.n):
+        oc, nc = int(batch.old_cluster[i]), int(batch.new_cluster[i])
+        oid, nid = int(batch.old_id[i]), int(batch.new_id[i])
+        if oid >= 0 and 0 <= oc < n_clusters:
+            d, lc = oc // ks, oc % ks
+            counts[d, lc] = _segment_remove(
+                ids[d], bias[d], None, None, int(offs[d, lc]),
+                int(counts[d, lc]), oid, n_clusters)
+        if nid >= 0 and 0 <= nc < n_clusters:
+            d, lc = nc // ks, nc % ks
+            cap = int(offs[d, lc + 1] - offs[d, lc])
+            counts[d, lc] = _segment_insert(
+                ids[d], bias[d], None, None, int(offs[d, lc]),
+                int(counts[d, lc]), cap, nid, float(batch.bias[i]), None,
+                int(batch.slot[i]), store_capacity, nc)
+    new = sidx._replace(item_ids=jnp.asarray(ids),
+                        item_bias=jnp.asarray(bias),
+                        counts=jnp.asarray(counts))
+    if mesh is not None:
+        from repro.serving.sharding import place_sharded_index
+        new = place_sharded_index(new, mesh)
+    return new
+
+
+# ---------------------------------------------------------------------------
+# The versioned log
+# ---------------------------------------------------------------------------
+
+class LogEntry:
+    """One logged delta batch.  ``applied`` flips to True the moment the
+    batch became visible in SOME published index (live apply or rebuild
+    replay) — it gates freshness accounting, not replay correctness."""
+
+    __slots__ = ("version", "batch", "applied")
+
+    def __init__(self, version: int, batch: DeltaBatch, applied: bool):
+        self.version = version
+        self.batch = batch
+        self.applied = applied
+
+
+class DeltaLog:
+    """Monotonically versioned, truncatable log of delta batches.
+
+    Versions never repeat or regress; ``truncate_upto(v)`` drops every
+    entry a rebuild snapshot already covers (its store was written
+    before the snapshot), which is how compaction bounds the log: each
+    published rebuild folds its covered prefix away.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries: List[LogEntry] = []
+        self._version = 0
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def append(self, batch: DeltaBatch, applied: bool = False) -> LogEntry:
+        with self._lock:
+            self._version += 1
+            e = LogEntry(self._version, batch, applied)
+            self._entries.append(e)
+            return e
+
+    def entries(self) -> List[LogEntry]:
+        """Snapshot of the current entries (oldest first)."""
+        with self._lock:
+            return list(self._entries)
+
+    def truncate_upto(self, version: int) -> int:
+        """Drop entries with version <= ``version``; returns #dropped."""
+        with self._lock:
+            n0 = len(self._entries)
+            self._entries = [e for e in self._entries
+                             if e.version > version]
+            return n0 - len(self._entries)

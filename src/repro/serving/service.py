@@ -34,6 +34,7 @@ from repro.configs.base import SVQConfig
 from repro.core import assignment_store as astore
 from repro.core import retriever
 from repro.serving import batcher as batcher_lib
+from repro.serving import deltas as deltas_lib
 from repro.serving import sharding as sharding_lib
 from repro.serving.swap import DoubleBufferedIndex, IndexGeneration
 from repro.serving.telemetry import ServeStats
@@ -42,19 +43,29 @@ from repro.serving.telemetry import ServeStats
 class RetrievalService:
     def __init__(self, cfg: SVQConfig, params, index_state,
                  items_per_cluster: int = 256, use_kernel: bool = False,
-                 n_shards: Optional[int] = None, mesh=None):
+                 n_shards: Optional[int] = None, mesh=None,
+                 delta_spare: int = 0):
         self.cfg = cfg
         self.items_per_cluster = items_per_cluster
         self.use_kernel = use_kernel
         self.n_shards = n_shards
         self.mesh = mesh
+        # spare slots per cluster segment: the headroom incremental delta
+        # publication (serving/deltas.py) appends into.  0 = dense layout,
+        # every immediate apply falls back to a forced compaction rebuild.
+        self.delta_spare = delta_spare
         self.stats = ServeStats()
         self._lock = threading.Lock()
         self._params = params
         self._index_state = index_state
+        self._store_capacity = index_state.store.capacity
+        self._log = deltas_lib.DeltaLog()
+        idx0, v0 = self._build_index()
         self._buffer = DoubleBufferedIndex(
-            self._build_index, self._build_index(),
-            on_publish=self._on_publish)
+            self._build_index, idx0,
+            on_publish=self._on_publish,
+            reconcile_fn=self._reconcile,
+            initial_version=v0)
         self.stats.index_rebuilds += 1          # the initial build
         # single dispatch: single-device and sharded serve go through the
         # same retriever serve_kernel/rank_codebook switches
@@ -74,21 +85,80 @@ class RetrievalService:
 
     # -- index lifecycle (swap.py) -----------------------------------------
     def _build_index(self):
-        """Snapshot the live store -> fresh Appendix-B layout (+shards)."""
+        """Snapshot the live store -> fresh Appendix-B layout (+shards).
+
+        The DeltaLog version is captured under the SAME lock acquisition
+        as the store snapshot, so every log entry with version <= v0 is
+        already reflected in this build and every later entry is not —
+        the invariant ``_reconcile`` relies on for truncation/replay.
+        """
         with self._lock:
             state = self._index_state
+            v0 = self._log.version
         idx = astore.build_serving_index(state.store, self.cfg.n_clusters,
-                                         use_kernel=self.use_kernel)
+                                         use_kernel=self.use_kernel,
+                                         spare_per_cluster=self.delta_spare)
         if self.n_shards:
             idx = sharding_lib.shard_serving_index(
                 idx, self.cfg.n_clusters, self.n_shards)
             if self.mesh is not None:
                 idx = sharding_lib.place_sharded_index(idx, self.mesh)
-        return idx
+        return idx, v0
+
+    def _apply_to_index(self, index, batch: deltas_lib.DeltaBatch):
+        if self.n_shards:
+            return deltas_lib.apply_deltas_sharded(
+                index, batch, self.cfg.n_clusters, self._store_capacity,
+                mesh=self.mesh)
+        return deltas_lib.apply_deltas(index, batch, self.cfg.n_clusters,
+                                       self._store_capacity)
+
+    def _record_freshness(self, batch: deltas_lib.DeltaBatch,
+                          now: float) -> None:
+        """Freshness = assignment time -> first retrievable publish."""
+        n_new = int((batch.new_id >= 0).sum())
+        if n_new:
+            self.stats.freshness.record(max(now - batch.t_assign, 0.0),
+                                        n_new)
+
+    def _reconcile(self, build_result):
+        """Fold the pending delta log into a freshly built index.
+
+        Runs under the publish lock just before the swap.  Entries the
+        build snapshot already covers (version <= v0) are truncated —
+        that is the compaction step: their spare-slot edits became part
+        of the dense rebuild.  Entries appended DURING the build window
+        (version > v0) are replayed onto the new index so publication
+        never loses an applied delta.  Freshness is recorded here for
+        deferred entries whose first retrievable moment is this publish.
+        """
+        idx, v0 = build_result
+        now = time.monotonic()
+        version = v0
+        for e in self._log.entries():
+            if e.version <= v0:
+                if not e.applied:
+                    self._record_freshness(e.batch, now)
+                    e.applied = True
+                continue
+            if version != e.version - 1:
+                break                       # keep replay gap-free
+            try:
+                idx = self._apply_to_index(idx, e.batch)
+            except deltas_lib.SpareCapacityExceeded:
+                break                       # next rebuild covers the rest
+            version = e.version
+            if not e.applied:
+                self._record_freshness(e.batch, now)
+                e.applied = True
+        self._log.truncate_upto(v0)
+        return idx, version
 
     def _on_publish(self, gen: IndexGeneration, build_s: float) -> None:
         with self._lock:
             self.stats.index_rebuilds += 1
+            self.stats.delta_version = gen.delta_version
+            self.stats.stale_builds = self._buffer.n_stale_builds
         self.stats.stage("rebuild").record(build_s)
 
     # -- training-side hooks -------------------------------------------------
@@ -113,6 +183,73 @@ class RetrievalService:
     @property
     def index_generation(self) -> IndexGeneration:
         return self._buffer.current()
+
+    @property
+    def delta_log(self) -> deltas_lib.DeltaLog:
+        return self._log
+
+    def store_snapshot(self) -> astore.AssignmentStore:
+        """The store the serving side currently reflects (applied deltas
+        included) — what a batch rebuild oracle should be built from."""
+        with self._lock:
+            return self._index_state.store
+
+    # -- incremental delta path (deltas.py) --------------------------------
+    def apply_deltas(self, batch: deltas_lib.DeltaBatch,
+                     immediate: bool = True) -> int:
+        """Ingest one step's (re)assignment deltas; returns log version.
+
+        ``immediate=True`` (the delta path): the store write-back, the
+        log append and the live-index edit all happen atomically under
+        the publish lock (``DoubleBufferedIndex.mutate``), so readers
+        see either the pre-batch or post-batch index, never a partial
+        apply, and no concurrent rebuild can double-apply the batch.
+        When a cluster's spare capacity is exhausted the batch aborts
+        (live index untouched), the write stays in the store + log, and
+        a FORCED COMPACTION (synchronous rebuild) publishes it instead.
+
+        ``immediate=False`` (deferred baseline): store + log only; the
+        batch becomes retrievable at the next rebuild, which is when its
+        freshness is recorded — the rebuild-cadence baseline the
+        freshness benchmark compares against.
+        """
+        if not immediate:
+            with self._lock:
+                self._index_state = self._index_state._replace(
+                    store=deltas_lib.write_back(
+                        self._index_state.store, batch))
+                entry = self._log.append(batch, applied=False)
+            return entry.version
+
+        holder = {}
+
+        def fn(index, _version):
+            with self._lock:
+                self._index_state = self._index_state._replace(
+                    store=deltas_lib.write_back(
+                        self._index_state.store, batch))
+                entry = self._log.append(batch, applied=False)
+            holder["entry"] = entry
+            new_index = self._apply_to_index(index, batch)  # may raise
+            entry.applied = True
+            self._record_freshness(batch, time.monotonic())
+            with self._lock:
+                self.stats.delta_applies += 1
+                self.stats.delta_items += batch.n
+                self.stats.delta_version = entry.version
+            return new_index, entry.version
+
+        try:
+            self._buffer.mutate(fn)
+        except deltas_lib.SpareCapacityExceeded:
+            # The store already holds the write (fn ran it before the
+            # raise), so one synchronous rebuild both compacts the spare
+            # layout and publishes the batch; _reconcile records its
+            # freshness and truncates it out of the log.
+            with self._lock:
+                self.stats.delta_compactions += 1
+            self.rebuild_index()
+        return holder["entry"].version
 
     # -- request path ----------------------------------------------------------
     def serve_batch(self, batch: Dict[str, np.ndarray], task: int = 0,

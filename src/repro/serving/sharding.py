@@ -75,10 +75,11 @@ class ShardedServingIndex(NamedTuple):
     """
     item_ids: jax.Array      # (D, cap) int32, -1 padded
     item_bias: jax.Array     # (D, cap) sorted desc within each segment
-    offsets: jax.Array       # (D, Ks+1) int32 shard-local
+    offsets: jax.Array       # (D, Ks+1) int32 shard-local segment starts
     item_base: jax.Array     # (D,) int32 global pos of shard's first item
-    n_real: jax.Array        # () int32: total real (non-sentinel) items
+    n_real: jax.Array        # () int32: global end of the sharded region
     n_items: jax.Array       # () int32: global capacity incl. sentinels
+    counts: jax.Array        # (D, Ks) int32 live items per local segment
 
     @property
     def n_shards(self) -> int:
@@ -112,30 +113,39 @@ def shard_serving_index(index: astore.ServingIndex, n_clusters: int,
     offs = np.asarray(index.offsets)
     ids = np.asarray(index.item_ids)
     bias = np.asarray(index.item_bias)
+    live = np.asarray(index.counts)
     n_real = int(offs[n_clusters])
-    # The sentinel tail (never-written PS slots) must be constant so the
-    # sharded gather can synthesize it; guard the bit-exactness claim.
-    if not ((ids[n_real:] == -1).all() and (bias[n_real:] == 0.0).all()):
-        raise ValueError("sentinel tail is not constant (-1 id, 0 bias)")
+    # Every non-live slot (per-cluster spare capacity + the sentinel
+    # tail of never-written PS slots) must be constant so the sharded
+    # gather can synthesize it; guard the bit-exactness claim.
+    live_mask = np.zeros(ids.shape[0], bool)
+    for c in range(n_clusters):
+        live_mask[offs[c]:offs[c] + live[c]] = True
+    if not ((ids[~live_mask] == -1).all()
+            and (bias[~live_mask] == 0.0).all()):
+        raise ValueError("non-live slots are not constant (-1 id, 0 bias)")
 
     base = offs[np.arange(n_shards) * ks].astype(np.int32)
-    ends = np.concatenate([base[1:], [n_real]]).astype(np.int32)
-    counts = ends - base
-    cap = _bucket(int(counts.max(initial=0)), cap_quantum)
+    ends = offs[(np.arange(n_shards) + 1) * ks].astype(np.int32)
+    region = ends - base
+    cap = _bucket(int(region.max(initial=0)), cap_quantum)
 
     s_ids = np.full((n_shards, cap), -1, np.int32)
     s_bias = np.zeros((n_shards, cap), bias.dtype)
     s_offs = np.zeros((n_shards, ks + 1), np.int32)
+    s_cnts = np.zeros((n_shards, ks), np.int32)
     for d in range(n_shards):
         lo, hi = int(base[d]), int(ends[d])
         s_ids[d, :hi - lo] = ids[lo:hi]
         s_bias[d, :hi - lo] = bias[lo:hi]
         s_offs[d] = offs[d * ks:(d + 1) * ks + 1] - base[d]
+        s_cnts[d] = live[d * ks:(d + 1) * ks]
     return ShardedServingIndex(
         item_ids=jnp.asarray(s_ids),
         item_bias=jnp.asarray(s_bias), offsets=jnp.asarray(s_offs),
         item_base=jnp.asarray(base),
-        n_real=jnp.int32(n_real), n_items=jnp.int32(index.n_items))
+        n_real=jnp.int32(n_real), n_items=jnp.int32(index.n_items),
+        counts=jnp.asarray(s_cnts))
 
 
 def place_sharded_index(sidx: ShardedServingIndex, mesh: Mesh,
@@ -154,7 +164,8 @@ def place_sharded_index(sidx: ShardedServingIndex, mesh: Mesh,
         offsets=put(sidx.offsets, P(axis, None)),
         item_base=put(sidx.item_base, P()),       # replicated: routing table
         n_real=put(sidx.n_real, P()),
-        n_items=put(sidx.n_items, P()))
+        n_items=put(sidx.n_items, P()),
+        counts=put(sidx.counts, P(axis, None)))
 
 
 def sharded_serve(params: Params, state: IndexState, cfg: SVQConfig,
@@ -200,7 +211,7 @@ def sharded_serve(params: Params, state: IndexState, cfg: SVQConfig,
     owner = top_clusters // ks                                   # (B, C)
     local_c = top_clusters % ks
     lstart = sidx.offsets[owner, local_c]
-    counts = sidx.offsets[owner, local_c + 1] - lstart
+    counts = sidx.counts[owner, local_c]      # live prefix (tombstone-aware)
     ar = jnp.arange(L, dtype=jnp.int32)
     # global flat positions, identical (incl. the n-1 clamp) to the
     # single-device ``starts[..., None] + arange`` slab

@@ -3,23 +3,40 @@
 The paper rebuilds the compact Appendix-B index ASYNCHRONOUSLY from the
 live assignment PS: serving never pauses for a rebuild, and a rebuild
 never sees a half-written index.  ``DoubleBufferedIndex`` models that as
-two generations: the LIVE generation serves lock-free reads while a
-single background builder produces generation N+1 from the live
-``AssignmentStore`` snapshot; publication is one atomic reference swap
-of an epoch-tagged ``IndexGeneration`` (a CPython attribute store, so a
-reader sees either the old pair or the new pair, never a mix).
+epoch-tagged generations: the LIVE generation serves lock-free reads
+while builders produce the next one from the live ``AssignmentStore``
+snapshot; publication is one atomic reference swap of an epoch-tagged
+``IndexGeneration`` (a CPython attribute store, so a reader sees either
+the old tuple or the new tuple, never a mix).
+
+Builds run CONCURRENTLY (a slow background build must not block a
+foreground/final rebuild, and neither may block delta publication), so
+publication is guarded by a build ticket drawn at build start: a build
+that finishes after a later-started build has already published is
+DROPPED (counted in ``n_stale_builds``) instead of overwriting the newer
+index — this closes the stop_background(final_rebuild=True) window where
+an in-flight background rebuild could land after the final rebuild and
+publish an older snapshot.  Any state the dropped build missed lives in
+the delta log and is replayed by the published build's reconcile step.
 
 Epochs are strictly monotone: every publish increments the epoch, and
 ``latest_epoch`` lets the serving side count staleness: how often a
 response was produced while a newer generation was ALREADY live, i.e.
 a rebuild published mid-serve.  Under background rebuild churn this is
 the overlap metric (see ServeStats.stale_serves), not an error.
+
+Incremental delta publication (serving/deltas.py) rides the same atomic
+swap: ``mutate`` replaces the live generation's index IN PLACE (same
+epoch, bumped ``delta_version``) under the short publish lock, and the
+optional ``reconcile_fn`` lets the owner fold the pending delta log into
+a freshly built index before it is swapped in (log truncation up to the
+build's snapshot version + replay of deltas that arrived mid-build).
 """
 from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 from repro.serving.telemetry import LatencyHistogram
 
@@ -29,28 +46,45 @@ class IndexGeneration(NamedTuple):
     epoch: int
     index: Any                  # ServingIndex | ShardedServingIndex
     published_at: float         # time.monotonic() at publish
+    delta_version: int = 0      # highest DeltaLog version folded in
 
 
 class DoubleBufferedIndex:
-    """Epoch-tagged atomic index double buffer with a background builder.
+    """Epoch-tagged atomic index double buffer with background builders.
 
     ``build_fn()`` must snapshot its own inputs (the service passes a
     closure that reads the live IndexState under the service lock) and
-    return a fully-built index; it runs on the caller's thread in
+    return a fully-built result; it runs on the caller's thread in
     ``rebuild_once`` and on the private thread in ``start_background``.
+
+    ``reconcile_fn(build_result)`` (optional) runs under the publish
+    lock just before the swap and must return ``(index,
+    delta_version)`` — the hook point where the delta log is truncated
+    and mid-build deltas are replayed.  Without it, ``build_fn`` must
+    return the index itself.
     """
 
     def __init__(self, build_fn: Callable[[], Any], initial_index: Any,
                  on_publish: Optional[Callable[[IndexGeneration, float],
-                                              None]] = None):
+                                              None]] = None,
+                 reconcile_fn: Optional[
+                     Callable[[Any], Tuple[Any, int]]] = None,
+                 initial_version: int = 0):
         self._build_fn = build_fn
         self._on_publish = on_publish
-        self._gen = IndexGeneration(0, initial_index, time.monotonic())
-        self._build_lock = threading.Lock()     # one builder at a time
+        self._reconcile_fn = reconcile_fn
+        self._gen = IndexGeneration(0, initial_index, time.monotonic(),
+                                    initial_version)
+        self._publish_lock = threading.Lock()   # guards _gen writes
+        self._ticket_lock = threading.Lock()
+        self._build_seq = 0                     # tickets drawn
+        self._published_seq = 0                 # ticket of live build
+        self._thread_lock = threading.Lock()    # start/stop lifecycle
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.build_hist = LatencyHistogram()
-        self.n_builds = 0
+        self.n_builds = 0                       # published builds
+        self.n_stale_builds = 0                 # dropped by ticket guard
 
     # -- read side ---------------------------------------------------------
     def current(self) -> IndexGeneration:
@@ -63,40 +97,84 @@ class DoubleBufferedIndex:
 
     # -- write side --------------------------------------------------------
     def rebuild_once(self) -> IndexGeneration:
-        """Build the next generation from live state and publish it."""
-        with self._build_lock:
-            t0 = time.monotonic()
-            new_index = self._build_fn()
-            dt = time.monotonic() - t0
-            gen = IndexGeneration(self._gen.epoch + 1, new_index,
-                                  time.monotonic())
+        """Build the next generation from live state and publish it.
+
+        Concurrent callers race at publication only: the build with the
+        latest start ticket wins; builds overtaken by a later-started
+        build are dropped (their content is a strict subset of what the
+        winner's build + delta replay already covers).
+        """
+        with self._ticket_lock:
+            self._build_seq += 1
+            ticket = self._build_seq
+        t0 = time.monotonic()
+        result = self._build_fn()
+        dt = time.monotonic() - t0
+        with self._publish_lock:
+            if ticket <= self._published_seq:
+                self.n_stale_builds += 1        # a newer build is live
+                return self._gen
+            if self._reconcile_fn is not None:
+                index, version = self._reconcile_fn(result)
+            else:
+                index, version = result, self._gen.delta_version
+            gen = IndexGeneration(self._gen.epoch + 1, index,
+                                  time.monotonic(), version)
             self._gen = gen                     # the atomic pointer swap
+            self._published_seq = ticket
             self.n_builds += 1
             self.build_hist.record(dt)
         if self._on_publish is not None:
             self._on_publish(gen, dt)
         return gen
 
+    def mutate(self, fn: Callable[[Any, int], Tuple[Any, int]]
+               ) -> IndexGeneration:
+        """Atomically replace the live generation's index in place.
+
+        ``fn(index, delta_version) -> (new_index, new_delta_version)``
+        runs under the publish lock, so it is serialized against every
+        rebuild publication and every other mutation; the epoch does NOT
+        advance (a delta publication is not a new generation).  If ``fn``
+        raises, the live generation is left untouched.
+        """
+        with self._publish_lock:
+            gen = self._gen
+            new_index, version = fn(gen.index, gen.delta_version)
+            gen = IndexGeneration(gen.epoch, new_index, time.monotonic(),
+                                  version)
+            self._gen = gen
+        return gen
+
     # -- background builder ------------------------------------------------
     def start_background(self, interval_s: float) -> None:
         """Rebuild every ``interval_s`` on a daemon thread until stopped."""
-        if self._thread is not None:
-            raise RuntimeError("background rebuild already running")
-        self._stop.clear()
+        with self._thread_lock:
+            if self._thread is not None:
+                raise RuntimeError("background rebuild already running")
+            self._stop.clear()
 
-        def loop():
-            while not self._stop.wait(interval_s):
-                self.rebuild_once()
+            def loop():
+                while not self._stop.wait(interval_s):
+                    self.rebuild_once()
 
-        self._thread = threading.Thread(target=loop, daemon=True,
-                                        name="index-rebuild")
-        self._thread.start()
+            self._thread = threading.Thread(target=loop, daemon=True,
+                                            name="index-rebuild")
+            self._thread.start()
 
     def stop_background(self, final_rebuild: bool = False) -> None:
-        if self._thread is None:
-            return
-        self._stop.set()
-        self._thread.join()
-        self._thread = None
+        """Stop the background builder (idempotent, thread-safe).
+
+        ``final_rebuild=True`` publishes one last generation after the
+        thread is joined.  An in-flight background build racing it is
+        harmless: whichever started later wins publication and the
+        earlier one is dropped by the ticket guard, so the live index
+        can never regress to the older snapshot.
+        """
+        with self._thread_lock:
+            thread, self._thread = self._thread, None
+        if thread is not None:
+            self._stop.set()
+            thread.join()
         if final_rebuild:
             self.rebuild_once()

@@ -53,13 +53,18 @@ class LatencyHistogram:
     def upper_edge(self, bucket: int) -> float:
         return self.lo * self.growth ** bucket
 
-    def record(self, seconds: float) -> None:
+    def record(self, seconds: float, n: int = 1) -> None:
+        """Record ``n`` identical samples of ``seconds`` (n > 1 is the
+        delta-batch case: every item in the batch became retrievable at
+        the same publish instant)."""
+        if n <= 0:
+            return
         seconds = max(float(seconds), 0.0)
         b = self.bucket_of(seconds)
         with self._lock:
-            self.counts[b] += 1
-            self.count += 1
-            self.sum += seconds
+            self.counts[b] += n
+            self.count += n
+            self.sum += seconds * n
             if seconds < self.min:
                 self.min = seconds
             if seconds > self.max:
@@ -128,8 +133,21 @@ class ServeStats:
     # already been published (a rebuild overlapped the serve) — the
     # rebuild/serve overlap metric, not an error
     stale_serves: int = 0
+    # incremental delta publication (deltas.py)
+    delta_applies: int = 0              # delta batches applied live
+    delta_items: int = 0                # items (re)published via deltas
+    delta_compactions: int = 0          # forced rebuilds on spare overflow
+    delta_version: int = 0              # log version of the last serve
+    stale_builds: int = 0               # builds dropped by the swap guard
     # batched-serve latency (serve_batch wall time)
     latency: LatencyHistogram = dataclasses.field(
+        default_factory=LatencyHistogram)
+    # FRESHNESS: time from an assignment update (train-step PS write) to
+    # the instant the item was first retrievable from the live index —
+    # the paper's "index immediacy" claim, measured.  Delta publication
+    # records apply->publish latency; the rebuild-only baseline records
+    # write->next-generation-publish latency (the rebuild interval tail).
+    freshness: LatencyHistogram = dataclasses.field(
         default_factory=LatencyHistogram)
     # per-stage histograms keyed by stage name ("queue_wait", "serve_jit",
     # "rebuild", ...); created lazily via .stage()
@@ -162,6 +180,7 @@ class ServeStats:
         self.n_batches = 0
         self.total_latency_s = 0.0
         self.latency = LatencyHistogram()
+        self.freshness = LatencyHistogram()
         with self._stage_lock:
             self.stages.clear()
 
@@ -181,5 +200,10 @@ class ServeStats:
             index_rebuilds=self.index_rebuilds,
             index_swaps=self.index_swaps,
             generation=self.generation, stale_serves=self.stale_serves,
+            delta_applies=self.delta_applies, delta_items=self.delta_items,
+            delta_compactions=self.delta_compactions,
+            delta_version=self.delta_version,
+            stale_builds=self.stale_builds,
             latency=self.latency.to_dict(),
+            freshness=self.freshness.to_dict(),
             stages={k: v.to_dict() for k, v in sorted(self.stages.items())})

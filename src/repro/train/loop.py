@@ -10,7 +10,14 @@ Responsibilities (DESIGN.md §5):
   - bounded in-flight dispatch (JAX's async dispatch is throttled by
     blocking on metrics every ``sync_every`` steps so a slow host cannot
     run unboundedly ahead),
-  - metric history for benchmarks.
+  - metric history for benchmarks,
+  - per-stage latency histograms shared with the serving telemetry
+    (pass ``stats=ServeStats()``): ``data_wait`` / ``train_step`` record
+    every step, ``straggler_step`` records only the flagged outliers, so
+    straggler accounting and serve_p99 live in one benchmarkable object,
+  - an ``on_step(step, state, batch)`` hook, the attach point for
+    incremental delta emission into a live RetrievalService
+    (serving/deltas.py: extract_deltas -> service.apply_deltas).
 """
 from __future__ import annotations
 
@@ -35,6 +42,8 @@ class LoopConfig:
     sync_every: int = 10
     straggler_factor: float = 3.0
     log_every: int = 0                      # 0 = silent
+    stats: Optional[Any] = None             # telemetry.ServeStats sink
+    on_step: Optional[Callable[[int, Any, Any], None]] = None
 
 
 @dataclasses.dataclass
@@ -71,6 +80,7 @@ def run_loop(step_fn: Callable[[Any, Any], tuple],
     stragglers = 0
     history: List[Dict[str, float]] = []
     for step in range(start_step, cfg.n_steps):
+        t_data = time.perf_counter()
         batch = batch_iter(step)
         t0 = time.perf_counter()
         state, metrics = step_fn(state, batch)
@@ -78,11 +88,18 @@ def run_loop(step_fn: Callable[[Any, Any], tuple],
             metrics = {k: float(np.asarray(v)) for k, v in metrics.items()}
             history.append({"step": step, **metrics})
         dt = time.perf_counter() - t0
+        if cfg.stats is not None:
+            cfg.stats.stage("data_wait").record(t0 - t_data)
+            cfg.stats.stage("train_step").record(dt)
         if len(lat) >= 10:
             med = statistics.median(lat)
             if dt > cfg.straggler_factor * med:
                 stragglers += 1
+                if cfg.stats is not None:
+                    cfg.stats.stage("straggler_step").record(dt)
         lat.append(dt)
+        if cfg.on_step is not None:
+            cfg.on_step(step, state, batch)
         if ckpt and (step + 1) % cfg.ckpt_every == 0:
             ckpt.save_async(step + 1, state)
         if cfg.log_every and step % cfg.log_every == 0 and history:

@@ -149,3 +149,94 @@ def test_foreground_and_background_builders_serialize():
         buf.start_background(0.001)                # guard double-start
         buf.start_background(0.001)
     buf.stop_background()
+
+
+def test_inflight_build_cannot_regress_newer_publication():
+    """Regression for the stop_background(final_rebuild=True) window: a
+    build that STARTED earlier but finishes LATER must be dropped, never
+    published over the newer snapshot.  Deterministic via a gate: build
+    ticket 1 blocks inside build_fn while ticket 2 publishes."""
+    entered = threading.Event()
+    release = threading.Event()
+    n = {"builds": 0}
+
+    def build():
+        n["builds"] += 1
+        me = n["builds"]
+        if me == 1:
+            entered.set()
+            assert release.wait(5)
+        return f"payload-{me}"
+
+    buf = DoubleBufferedIndex(build, "initial")
+    t = threading.Thread(target=buf.rebuild_once)
+    t.start()
+    assert entered.wait(5)                 # ticket 1 in flight, blocked
+    gen2 = buf.rebuild_once()              # "final" rebuild: later ticket
+    assert gen2.index == "payload-2" and gen2.epoch == 1
+    release.set()                          # let the stale build finish
+    t.join()
+    cur = buf.current()
+    assert cur.index == "payload-2", "older snapshot republished"
+    assert cur.epoch == 1                  # epoch never regressed/bumped
+    assert buf.n_builds == 1 and buf.n_stale_builds == 1
+    assert buf.build_hist.count == 1       # dropped build not recorded
+
+
+def test_concurrent_stop_background_is_idempotent():
+    def build():
+        time.sleep(0.001)
+        return object()
+
+    buf = DoubleBufferedIndex(build, None)
+    buf.start_background(0.001)
+    errors = []
+
+    def stopper():
+        try:
+            buf.stop_background(final_rebuild=True)
+        except Exception as e:             # pragma: no cover
+            errors.append(e)
+
+    ts = [threading.Thread(target=stopper) for _ in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errors, errors
+    epoch = buf.latest_epoch
+    time.sleep(0.02)                       # thread really gone: no more
+    assert buf.latest_epoch == epoch       # publications after stop
+    assert buf.latest_epoch == buf.n_builds
+
+
+def test_mutate_republishes_same_epoch():
+    buf = DoubleBufferedIndex(lambda: 100, 0)
+    g = buf.mutate(lambda idx, v: (idx + 1, v + 1))
+    assert (g.epoch, g.index, g.delta_version) == (0, 1, 1)
+    g = buf.mutate(lambda idx, v: (idx + 1, v + 1))
+    assert (g.epoch, g.index, g.delta_version) == (0, 2, 2)
+    g2 = buf.rebuild_once()                # rebuild still advances epoch
+    assert g2.epoch == 1 and g2.index == 100
+
+
+def test_mutate_exception_leaves_generation_untouched():
+    buf = DoubleBufferedIndex(lambda: 1, "idx0")
+
+    def bad(idx, v):
+        raise ValueError("boom")
+
+    with pytest.raises(ValueError):
+        buf.mutate(bad)
+    cur = buf.current()
+    assert cur.index == "idx0" and cur.epoch == 0 and cur.delta_version == 0
+
+
+def test_reconcile_fn_runs_under_publication():
+    """build_fn result goes through reconcile_fn -> (index, version)."""
+    buf = DoubleBufferedIndex(lambda: ("built", 7), "init",
+                              reconcile_fn=lambda r: (r[0] + "-rec", r[1]),
+                              initial_version=3)
+    assert buf.current().delta_version == 3
+    gen = buf.rebuild_once()
+    assert gen.index == "built-rec" and gen.delta_version == 7

@@ -153,3 +153,39 @@ def test_grad_compression_error_feedback_unbiased(rng):
         total += np.asarray(decompress(c)["w"])
     np.testing.assert_allclose(total / n, np.asarray(g_true["w"]),
                                atol=2e-3)
+
+
+def test_loop_stage_timings_and_on_step_hook():
+    """The loop shares the serving telemetry object: every step records
+    data_wait/train_step stage samples, stragglers land in their own
+    histogram, and on_step fires once per step (the delta-emission
+    attach point)."""
+    from repro.serving import ServeStats
+
+    opt = adamw(1e-2)
+    params = {"w": jnp.zeros(3)}
+
+    @jax.jit
+    def step_fn(state, batch):
+        g = {"w": state["p"]["w"] - 1.0}
+        p, o = opt.update(g, state["o"], state["p"], state["s"])
+        return {"p": p, "o": o, "s": state["s"] + 1}, {"w0": p["w"][0]}
+
+    seen = []
+    stats = ServeStats()
+    cfg = LoopConfig(n_steps=15, sync_every=5, stats=stats,
+                     on_step=lambda step, state, batch:
+                         seen.append((step, int(state["s"]))))
+    st0 = {"p": params, "o": opt.init(params),
+           "s": jnp.zeros((), jnp.int32)}
+    r = run_loop(step_fn, st0, lambda s: {"x": s}, cfg)
+    assert r.steps_run == 15
+    # per-stage timings populated for EVERY step
+    assert stats.stage("train_step").count == 15
+    assert stats.stage("data_wait").count == 15
+    assert stats.stage("train_step").sum > 0.0
+    # straggler histogram only holds flagged outliers
+    assert stats.stage("straggler_step").count == r.n_straggler_steps
+    # on_step saw every step, AFTER the state advanced
+    assert [s for s, _ in seen] == list(range(15))
+    assert seen[-1][1] == 15
