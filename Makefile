@@ -1,5 +1,5 @@
 # Repo entry points (tier-1 verify + benchmarks).
-.PHONY: test test-fast bench bench-serving bench-freshness
+.PHONY: test test-fast lint bench bench-serving bench-freshness bench-obs
 
 test:           ## full tier-1 suite incl. multi-device tier (what CI runs)
 	./scripts/test.sh
@@ -16,3 +16,9 @@ bench-serving:  ## serving throughput + p99 table (8 host-platform devices)
 
 bench-freshness: ## index-immediacy freshness table (BENCH_freshness.json)
 	PYTHONPATH=src python -m benchmarks.run --only freshness
+
+bench-obs:      ## observability overhead table (BENCH_observability.json)
+	PYTHONPATH=src python -m benchmarks.run --only observability
+
+lint:           ## ruff when installed, else a compileall syntax gate
+	./scripts/lint.sh

@@ -19,6 +19,7 @@ MODULES = [
     ("kernels", "benchmarks.bench_kernels"),          # kernel layer
     ("serving", "benchmarks.bench_serving"),          # §3.4 / Appendix B
     ("freshness", "benchmarks.bench_freshness"),      # §3.1 immediacy
+    ("observability", "benchmarks.bench_observability"),  # obs overhead
 ]
 
 

@@ -5,8 +5,11 @@
 Trains the paper's retriever on the synthetic impression + candidate
 streams for a few hundred steps (CPU-sized config), builds the serving
 index (Appendix-B layout), serves a batch of user requests through the
-two-step pipeline (cluster ranking -> merge sort -> ranking model), and
-reports Recall@50 against the stream's ground-truth affinity.
+two-step pipeline (cluster ranking -> merge sort -> ranking model),
+publishes a live delta, runs the async micro-batched front door, then
+scrapes the Prometheus endpoint and dumps the sampled request traces as
+Chrome trace-event JSON (open in Perfetto), and finally reports
+Recall@50 against the stream's ground-truth affinity.
 """
 import sys
 
@@ -19,6 +22,7 @@ from repro.core import assignment_store as astore
 from repro.core.freq_estimator import hash_ids
 from repro.data import RecsysStream, StreamConfig
 from repro.launch.train import eval_svq_recall, train_svq
+from repro.obs import Tracer, start_exporter
 from repro.serving import RetrievalService, extract_deltas
 
 
@@ -36,8 +40,11 @@ def main() -> None:
     print(f"final metrics: {res.metrics[-1]}")
 
     print("== serving ==")
-    # delta_spare reserves per-cluster headroom for live delta appends
-    svc = RetrievalService(cfg, params, index, delta_spare=32)
+    # delta_spare reserves per-cluster headroom for live delta appends;
+    # the tracer samples every 3rd request through the staged serve path
+    # (per-stage spans; numerics identical to the fused jit)
+    svc = RetrievalService(cfg, params, index, delta_spare=32,
+                           tracer=Tracer(capacity=128, sample_every=3))
     users = np.arange(16, dtype=np.int32)
     out = svc.serve_batch(dict(user_id=users,
                                hist=stream.user_hist[users]))
@@ -92,6 +99,31 @@ def main() -> None:
           f"{svc.index_generation.epoch}; "
           f"p50/p95/p99 = {svc.stats.p50_ms:.0f}/"
           f"{svc.stats.p95_ms:.0f}/{svc.stats.p99_ms:.0f} ms")
+
+    # observability (obs/): every serve above already fed the metric
+    # registry and the sampling tracer — scrape them like prod would
+    print("== observability: scrape + trace export ==")
+    reg = svc.register_metrics()                 # counters/gauges/histos
+    with start_exporter(reg, port=0, tracer=svc.tracer) as ex:
+        import urllib.request
+        with urllib.request.urlopen(ex.url("/metrics"), timeout=10) as r:
+            text = r.read().decode()
+        wanted = ("svq_requests_total", "svq_serve_latency_seconds_count",
+                  "svq_freshness_seconds_count",
+                  "svq_index_cluster_entropy")
+        shown = [ln for ln in text.splitlines()
+                 if ln.startswith(wanted)]
+        print(f"GET {ex.url('/metrics')} -> "
+              f"{sum(1 for ln in text.splitlines() if ln and ln[0] != '#')}"
+              f" series, e.g.:")
+        for ln in shown[:4]:
+            print(f"  {ln}")
+    traces = svc.tracer.traces()
+    trace_path = "/tmp/svq_trace.json"
+    svc.tracer.export_chrome_trace_json(trace_path)
+    spans = sorted({s.name for t in traces for s in t.spans})
+    print(f"{len(traces)} sampled traces ({spans}) -> {trace_path} "
+          f"(open in Perfetto / chrome://tracing)")
 
     rep = eval_svq_recall(cfg, params, index, stream, n_users=64, k=50)
     print(f"Recall@50 vs ground truth: {rep['recall']:.3f}")

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Lint gate: ruff when the environment has it, otherwise a byte-compile
+# syntax gate over the whole tree.  Either path exits NONZERO on
+# failure so CI treats lint like any other tier.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+if command -v ruff >/dev/null 2>&1; then
+  echo "[lint] ruff check"
+  exec ruff check src benchmarks tests examples scripts
+fi
+echo "[lint] ruff not installed; falling back to compileall syntax gate"
+exec python -m compileall -q src benchmarks tests examples

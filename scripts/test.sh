@@ -17,6 +17,12 @@
 #                   boundaries: sharded serving, the async batcher,
 #                   double-buffer swaps, and incremental deltas over
 #                   the ("shard",) mesh.
+#   obs             the observability suites (tracing, registry,
+#                   exporter, index health) under 8 host-platform
+#                   devices, so the sharded staged-serve span path runs
+#                   over a real mesh.
+#   lint            scripts/lint.sh: ruff when installed, else a
+#                   compileall syntax gate (nonzero on failure).
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -37,6 +43,18 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
     tests/test_swap_telemetry.py \
     tests/test_deltas.py \
   || { failures=$((failures + 1)); echo "[tier-2] FAILED"; }
+
+echo "[tier-3] observability tier (8 host-platform devices)"
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+  python -m pytest -x -q \
+    tests/test_obs_trace.py \
+    tests/test_obs_registry.py \
+    tests/test_obs_exporter.py \
+    tests/test_obs_health.py \
+  || { failures=$((failures + 1)); echo "[tier-3] FAILED"; }
+
+echo "[lint] scripts/lint.sh"
+./scripts/lint.sh || { failures=$((failures + 1)); echo "[lint] FAILED"; }
 
 if [ "$failures" -ne 0 ]; then
   echo "[test.sh] $failures tier(s) failed"

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.freq_estimator import hash_ids
+from repro.obs import trace
 
 
 class AssignmentStore(NamedTuple):
@@ -124,13 +125,15 @@ def build_serving_index(store: AssignmentStore, n_clusters: int,
     cl = jnp.where(occupied, store.cluster, n_clusters)
     if use_kernel:
         from repro.kernels import ops as kops
-        order = kops.index_sort(cl, store.item_bias)
+        with trace.annotate("index_sort"):
+            order = kops.index_sort(cl, store.item_bias)
         cl_sorted = cl[order]
         offsets = jnp.searchsorted(
             cl_sorted, jnp.arange(n_clusters + 1), side="left")
     else:
         from repro.kernels import ref as kref
-        order = kref.index_sort_ref(cl, store.item_bias)
+        with trace.annotate("index_sort"):
+            order = kref.index_sort_ref(cl, store.item_bias)
         cl_sorted = cl[order]
         counts = jax.ops.segment_sum(
             jnp.ones_like(cl_sorted, jnp.int32), cl_sorted, n_clusters + 1)

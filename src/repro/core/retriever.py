@@ -21,6 +21,7 @@ from repro.configs.base import SVQConfig
 from repro.core import assignment_store as astore
 from repro.core import freq_estimator as freq
 from repro.core import losses, merge_sort, ranking, vq
+from repro.obs import trace
 from repro.models.dense import init_mlp, mlp
 from repro.models.recsys import embedding as emb
 from repro.configs.base import EmbeddingSpec
@@ -262,19 +263,33 @@ def serve_kernel(top_scores: jax.Array, bias: jax.Array,
                                 exact)
 
 
-def serve(params: Params, state: IndexState, cfg: SVQConfig,
-          index: astore.ServingIndex, batch: Dict[str, jax.Array],
-          items_per_cluster: int = 256, task: int = 0,
-          use_kernel: bool = False) -> Dict[str, jax.Array]:
-    """Full retrieval for a user batch -> final candidate ids + scores."""
+def serve_stage_rank(params: Params, state: IndexState, cfg: SVQConfig,
+                     batch: Dict[str, jax.Array], task: int = 0,
+                     use_kernel: bool = False) -> Dict[str, jax.Array]:
+    """Stage 1 of serve: user tower + Eq. 11 cluster ranking.
+
+    The serve pipeline is split into three stage functions so the
+    observability layer can time each stage per request (three jit calls
+    with a sync between them); ``serve`` composes them op-for-op, so the
+    fused path's numerics are unchanged by the split.
+    """
     user_feat, hist_emb = user_features(params, batch["user_id"],
                                         batch["hist"])
     u = jax.vmap(lambda tw: mlp(tw, user_feat))(params["user_towers"])[task]
+    with trace.annotate("cluster_rank"):
+        top_scores, top_clusters = rank_clusters(state, u,
+                                                 cfg.clusters_per_query,
+                                                 use_kernel=use_kernel)
+    return dict(user_feat=user_feat, hist_emb=hist_emb,
+                top_scores=top_scores, top_clusters=top_clusters)
 
-    # ---- indexing step: rank clusters, fetch pre-sorted segments -------
-    top_scores, top_clusters = rank_clusters(state, u,
-                                             cfg.clusters_per_query,
-                                             use_kernel=use_kernel)
+
+def serve_stage_merge(cfg: SVQConfig, index: astore.ServingIndex,
+                      s1: Dict[str, jax.Array],
+                      items_per_cluster: int = 256,
+                      use_kernel: bool = False) -> Dict[str, jax.Array]:
+    """Stage 2 of serve: slab fetch + Alg. 1 merge -> candidate ids."""
+    top_scores, top_clusters = s1["top_scores"], s1["top_clusters"]
     starts = index.offsets[top_clusters]                     # (B, C)
     counts = index.counts[top_clusters]       # live prefix (tombstone-aware)
     L = items_per_cluster
@@ -285,9 +300,10 @@ def serve(params: Params, state: IndexState, cfg: SVQConfig,
 
     # ---- Alg. 1 merge sort over (cluster personality + item bias) ------
     S = cfg.candidates_out
-    pos, msort_scores = serve_kernel(top_scores, bias, lengths,
-                                     cfg.chunk_size, S,
-                                     use_kernel=use_kernel)
+    with trace.annotate("merge_serve"):
+        pos, msort_scores = serve_kernel(top_scores, bias, lengths,
+                                         cfg.chunk_size, S,
+                                         use_kernel=use_kernel)
     valid = pos >= 0
     c_idx = jnp.clip(pos, 0) // L
     i_idx = jnp.clip(pos, 0) % L
@@ -296,10 +312,18 @@ def serve(params: Params, state: IndexState, cfg: SVQConfig,
         (c_idx * L + i_idx).astype(jnp.int32), axis=1)       # (B, S)
     cand_ids = index.item_ids[flat]
     # the index's emb/bias payload is NOT gathered here: the ranking
-    # step re-embeds candidates from the model tables below
+    # step re-embeds candidates from the model tables in stage 3
+    return dict(cand_ids=cand_ids, valid=valid,
+                merge_scores=msort_scores)
 
-    # ---- ranking step over the compact candidate set -------------------
-    # ("VQ Two-tower" or "VQ Complicated" per cfg.ranking, §3.5)
+
+def serve_stage_ranking(params: Params, cfg: SVQConfig,
+                        s1: Dict[str, jax.Array], s2: Dict[str, jax.Array],
+                        task: int = 0) -> Dict[str, jax.Array]:
+    """Stage 3 of serve: ranking step over the compact candidate set
+    ("VQ Two-tower" or "VQ Complicated" per cfg.ranking, §3.5)."""
+    user_feat, hist_emb = s1["user_feat"], s1["hist_emb"]
+    cand_ids, valid = s2["cand_ids"], s2["valid"]
     cand_cate = jnp.zeros_like(cand_ids)      # cate refetched via tables
     item_feat = item_features(params, cand_ids, cand_cate)
     cross = (item_feat[..., :cfg.item_embed_dim]
@@ -311,6 +335,23 @@ def serve(params: Params, state: IndexState, cfg: SVQConfig,
     return dict(
         item_ids=jnp.take_along_axis(cand_ids, order, axis=1),
         scores=jnp.take_along_axis(rscores, order, axis=1),
-        merge_scores=msort_scores,
+        merge_scores=s2["merge_scores"],
         index_ids=cand_ids,
         valid=jnp.take_along_axis(valid, order, axis=1))
+
+
+def serve(params: Params, state: IndexState, cfg: SVQConfig,
+          index: astore.ServingIndex, batch: Dict[str, jax.Array],
+          items_per_cluster: int = 256, task: int = 0,
+          use_kernel: bool = False) -> Dict[str, jax.Array]:
+    """Full retrieval for a user batch -> final candidate ids + scores.
+
+    Composes the three stage functions (rank -> merge -> ranking); under
+    one jit this traces exactly the pre-split op sequence.
+    """
+    s1 = serve_stage_rank(params, state, cfg, batch, task=task,
+                          use_kernel=use_kernel)
+    s2 = serve_stage_merge(cfg, index, s1,
+                           items_per_cluster=items_per_cluster,
+                           use_kernel=use_kernel)
+    return serve_stage_ranking(params, cfg, s1, s2, task=task)

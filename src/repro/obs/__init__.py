@@ -1,0 +1,76 @@
+"""Unified observability layer (tracing, metrics, health, export).
+
+This package sits BELOW ``repro.serving`` in the import graph: obs
+modules never import serving code (they duck-type against it), so
+serving, training and benchmark code can all depend on obs without
+cycles.  Four parts:
+
+  ``histogram``     lock-exact log-spaced latency histograms and their
+                    immutable snapshots / interval diffs,
+  ``trace``         per-request span tracing with a bounded ring buffer
+                    and Chrome trace-event (Perfetto) export,
+  ``registry``      labeled counter/gauge/histogram registry with
+                    snapshot and interval-rate views,
+  ``index_health``  balance / occupancy / freshness gauges over live
+                    serving indexes (paper §3.1–§3.2 as numbers),
+  ``exporter``      Prometheus text exposition + stdlib HTTP scrape
+                    daemon + JSON dump.
+"""
+from repro.obs.exporter import (
+    Exporter,
+    dump_json,
+    start_exporter,
+    to_prometheus_text,
+)
+from repro.obs.histogram import HistogramSnapshot, LatencyHistogram
+from repro.obs.index_health import (
+    health_of,
+    index_health,
+    register_index_health,
+    service_health,
+    sharded_index_health,
+)
+from repro.obs.registry import (
+    Counter,
+    Family,
+    Gauge,
+    MetricRegistry,
+    register_serve_stats,
+    to_jsonable,
+)
+from repro.obs.trace import (
+    Span,
+    Trace,
+    Tracer,
+    annotate,
+    device_annotations_enabled,
+    enable_device_annotations,
+    make_span,
+)
+
+__all__ = [
+    "Counter",
+    "Exporter",
+    "Family",
+    "Gauge",
+    "HistogramSnapshot",
+    "LatencyHistogram",
+    "MetricRegistry",
+    "Span",
+    "Trace",
+    "Tracer",
+    "annotate",
+    "device_annotations_enabled",
+    "dump_json",
+    "enable_device_annotations",
+    "health_of",
+    "index_health",
+    "make_span",
+    "register_index_health",
+    "register_serve_stats",
+    "service_health",
+    "sharded_index_health",
+    "start_exporter",
+    "to_jsonable",
+    "to_prometheus_text",
+]

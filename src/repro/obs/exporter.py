@@ -1,0 +1,181 @@
+"""Scrape surface: Prometheus text exposition + stdlib HTTP daemon.
+
+The ROADMAP carried "surface ServeStats.snapshot() through a
+scrape-able endpoint" since PR 2; this is that endpoint, with the whole
+registry behind it.  Stdlib-only (``http.server``) so the serving
+container needs no new dependency:
+
+  ``to_prometheus_text(registry)``   text exposition format 0.0.4
+                                     (counters, gauges, histograms with
+                                     cumulative log-spaced ``le``
+                                     buckets + ``_sum``/``_count``),
+  ``start_exporter(registry, port)`` ThreadingHTTPServer on a daemon
+                                     thread serving
+                                       /metrics        Prometheus text
+                                       /metrics.json   JSON snapshot
+                                       /traces         Chrome trace-
+                                                       event JSON (when
+                                                       a tracer is
+                                                       attached)
+                                       /healthz        liveness probe
+  ``dump_json(registry, path)``      one-shot JSON dump (benchmarks).
+
+Scrapes read the registry through ``collect()`` — instruments resolve
+their own locks per family, so a scrape racing live serve traffic sees
+each family's consistent point-in-time value and never blocks the serve
+path beyond those per-instrument locks.
+"""
+from __future__ import annotations
+
+import json
+import math
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+from repro.obs.histogram import HistogramSnapshot
+from repro.obs.registry import MetricRegistry, to_jsonable
+from repro.obs.trace import Tracer
+
+CONTENT_TYPE_LATEST = "text/plain; version=0.0.4; charset=utf-8"
+
+
+def _fmt_float(v: float) -> str:
+    if math.isnan(v):
+        return "NaN"
+    if math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    return repr(float(v))
+
+
+def _fmt_labels(labels: dict, extra: str = "") -> str:
+    parts = [f'{k}="{_escape(v)}"' for k, v in sorted(labels.items())]
+    if extra:
+        parts.append(extra)
+    return "{" + ",".join(parts) + "}" if parts else ""
+
+
+def _escape(v: object) -> str:
+    return (str(v).replace("\\", r"\\").replace('"', r'\"')
+            .replace("\n", r"\n"))
+
+
+def _help_escape(text: str) -> str:
+    return text.replace("\\", r"\\").replace("\n", r"\n")
+
+
+def to_prometheus_text(reg: MetricRegistry) -> str:
+    """Render every registered family in text exposition format 0.0.4."""
+    lines = []
+    for fam in reg.collect():
+        if fam.help:
+            lines.append(f"# HELP {fam.name} {_help_escape(fam.help)}")
+        lines.append(f"# TYPE {fam.name} {fam.mtype}")
+        for labels, value in fam.series:
+            if isinstance(value, HistogramSnapshot):
+                acc = 0
+                for i, c in enumerate(value.counts):
+                    acc += c
+                    le = 'le="%s"' % _fmt_float(value.lo * value.growth ** i)
+                    lines.append(
+                        f"{fam.name}_bucket{_fmt_labels(labels, le)} {acc}")
+                lines.append(f"{fam.name}_bucket"
+                             + _fmt_labels(labels, 'le="+Inf"')
+                             + f" {value.count}")
+                lines.append(f"{fam.name}_sum{_fmt_labels(labels)} "
+                             f"{_fmt_float(value.sum)}")
+                lines.append(f"{fam.name}_count{_fmt_labels(labels)} "
+                             f"{value.count}")
+            else:
+                lines.append(f"{fam.name}{_fmt_labels(labels)} "
+                             f"{_fmt_float(float(value))}")
+    return "\n".join(lines) + "\n"
+
+
+def dump_json(reg: MetricRegistry, path: Optional[str] = None) -> dict:
+    """JSON snapshot of the registry (benchmark artifact path)."""
+    snap = to_jsonable(reg.snapshot())
+    if path is not None:
+        with open(path, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return snap
+
+
+class Exporter:
+    """Running scrape daemon; ``close()`` releases the port."""
+
+    def __init__(self, registry: MetricRegistry, host: str, port: int,
+                 tracer: Optional[Tracer] = None):
+        self.registry = registry
+        self.tracer = tracer
+        exporter = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def log_message(self, *_a):          # silence request spam
+                pass
+
+            def _reply(self, code: int, body: bytes, ctype: str) -> None:
+                self.send_response(code)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def do_GET(self):                    # noqa: N802 (stdlib API)
+                path = self.path.split("?", 1)[0]
+                try:
+                    if path in ("/metrics", "/"):
+                        body = to_prometheus_text(exporter.registry)
+                        self._reply(200, body.encode(),
+                                    CONTENT_TYPE_LATEST)
+                    elif path == "/metrics.json":
+                        body = json.dumps(
+                            to_jsonable(exporter.registry.snapshot()),
+                            sort_keys=True)
+                        self._reply(200, body.encode(),
+                                    "application/json")
+                    elif path == "/traces":
+                        if exporter.tracer is None:
+                            self._reply(404, b"no tracer attached\n",
+                                        "text/plain")
+                        else:
+                            body = exporter.tracer \
+                                .export_chrome_trace_json()
+                            self._reply(200, body.encode(),
+                                        "application/json")
+                    elif path == "/healthz":
+                        self._reply(200, b"ok\n", "text/plain")
+                    else:
+                        self._reply(404, b"not found\n", "text/plain")
+                except Exception as e:           # scrape must not wedge
+                    self._reply(500, f"{e}\n".encode(), "text/plain")
+
+        self._server = ThreadingHTTPServer((host, port), Handler)
+        self._server.daemon_threads = True
+        self.host, self.port = self._server.server_address[:2]
+        self._thread = threading.Thread(target=self._server.serve_forever,
+                                        name="obs-exporter", daemon=True)
+        self._thread.start()
+
+    def url(self, path: str = "/metrics") -> str:
+        return f"http://{self.host}:{self.port}{path}"
+
+    def close(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+        self._thread.join()
+
+    def __enter__(self) -> "Exporter":
+        return self
+
+    def __exit__(self, *_exc) -> None:
+        self.close()
+
+
+def start_exporter(registry: MetricRegistry, port: int = 0,
+                   host: str = "127.0.0.1",
+                   tracer: Optional[Tracer] = None) -> Exporter:
+    """Start the scrape daemon; ``port=0`` binds an ephemeral port
+    (read it back from ``exporter.port``)."""
+    return Exporter(registry, host, port, tracer=tracer)

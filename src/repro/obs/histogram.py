@@ -1,0 +1,204 @@
+"""Lock-exact log-spaced latency histograms (the observability base).
+
+The paper serves its index under strict tail-latency limits (§3.4 /
+Appendix B: "scoring-then-ranking under heavy traffic"), so the
+benchmarkable quantity is p99, not the mean.  ``LatencyHistogram`` keeps
+log-spaced buckets (8 per decade from 1 us to ~17 min) with an internal
+lock, so concurrent recorders stay EXACT — after N threads record M
+samples each, ``count == N * M`` with no tolerance.  Percentiles are
+resolved to the bucket's upper edge (a conservative bound: the true
+quantile is <= the reported value, never above it).
+
+This module is the canonical home (moved from ``serving/telemetry.py``
+so the observability layer sits BELOW serving in the import graph);
+``repro.serving.telemetry`` re-exports it for compatibility.  On top of
+recording, the registry's rate views (``obs/registry.py``) need two
+lock-exact derived forms:
+
+  ``snapshot()``   an immutable, JSON-normalizable copy taken under one
+                   lock acquisition (empty histograms report ``min`` as
+                   None instead of the non-serializable ``math.inf``),
+  ``diff(prev)``   the INTERVAL histogram between a past snapshot and
+                   now — bucket counts / count / sum are exactly the
+                   samples recorded since ``prev`` was taken, so
+                   interval p99s ("p99 over the last scrape period")
+                   come out of the same machinery as lifetime p99s.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+
+def _bucket_percentile(counts, total: int, q: float, lo: float,
+                       growth: float, max_cap: float) -> float:
+    """Upper edge of the bucket holding the q-quantile (0 < q <= 1)."""
+    if total == 0:
+        return 0.0
+    rank = max(1, math.ceil(q * total))
+    acc = 0
+    for i, c in enumerate(counts):
+        acc += c
+        if acc >= rank:
+            # clamp the edge to the exact max (tighter + finite even
+            # when the sample hit the unbounded last bucket)
+            return min(lo * growth ** i, max_cap)
+    return max_cap                               # pragma: no cover
+
+
+class HistogramSnapshot(NamedTuple):
+    """Immutable point-in-time copy of a ``LatencyHistogram``.
+
+    ``min`` is None for an empty snapshot (``math.inf`` would not
+    survive strict JSON parsers); ``max`` is 0.0.  ``diff`` outputs are
+    also snapshots, with ``min``/``max`` resolved to bucket edges
+    (exact sample extrema are not derivable from two cumulative views).
+    """
+    lo: float
+    growth: float
+    counts: Tuple[int, ...]
+    count: int
+    sum: float
+    min: Optional[float]
+    max: float
+
+    def percentile(self, q: float) -> float:
+        return _bucket_percentile(self.counts, self.count, q, self.lo,
+                                  self.growth, self.max)
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def to_dict(self) -> Dict[str, float]:
+        return dict(count=self.count, mean_ms=self.mean * 1e3,
+                    p50_ms=self.percentile(0.50) * 1e3,
+                    p95_ms=self.percentile(0.95) * 1e3,
+                    p99_ms=self.percentile(0.99) * 1e3,
+                    min_ms=(self.min if self.min is not None else 0.0) * 1e3,
+                    max_ms=self.max * 1e3)
+
+
+class LatencyHistogram:
+    """Lock-exact latency histogram over log-spaced buckets.
+
+    Bucket 0 holds everything <= ``lo`` seconds; bucket i covers
+    (lo * growth^(i-1), lo * growth^i]; the last bucket is unbounded
+    above.  Exact count / sum / min / max ride along so the mean stays
+    exact even though quantiles are bucket-resolved.
+    """
+
+    def __init__(self, lo: float = 1e-6, growth: float = 10 ** 0.125,
+                 n_buckets: int = 72):
+        self.lo = lo
+        self.growth = growth
+        self._log_growth = math.log(growth)
+        self.counts: List[int] = [0] * n_buckets
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = 0.0
+        self._lock = threading.Lock()
+
+    # -- recording ---------------------------------------------------------
+    def bucket_of(self, seconds: float) -> int:
+        if seconds <= self.lo:
+            return 0
+        i = 1 + int(math.log(seconds / self.lo) / self._log_growth)
+        return min(i, len(self.counts) - 1)
+
+    def upper_edge(self, bucket: int) -> float:
+        return self.lo * self.growth ** bucket
+
+    def record(self, seconds: float, n: int = 1) -> None:
+        """Record ``n`` identical samples of ``seconds`` (n > 1 is the
+        delta-batch case: every item in the batch became retrievable at
+        the same publish instant)."""
+        if n <= 0:
+            return
+        seconds = max(float(seconds), 0.0)
+        b = self.bucket_of(seconds)
+        with self._lock:
+            self.counts[b] += n
+            self.count += n
+            self.sum += seconds * n
+            if seconds < self.min:
+                self.min = seconds
+            if seconds > self.max:
+                self.max = seconds
+
+    # -- reading -----------------------------------------------------------
+    def percentile(self, q: float) -> float:
+        """Upper edge of the bucket holding the q-quantile (0 < q <= 1)."""
+        with self._lock:
+            return _bucket_percentile(self.counts, self.count, q, self.lo,
+                                      self.growth, self.max)
+
+    @property
+    def mean(self) -> float:
+        with self._lock:
+            return self.sum / self.count if self.count else 0.0
+
+    def merge(self, other: "LatencyHistogram") -> None:
+        """Fold ``other`` into self (matching bucket layout required)."""
+        if other is self:
+            raise ValueError("cannot merge a histogram into itself")
+        if (other.lo, other.growth, len(other.counts)) != \
+                (self.lo, self.growth, len(self.counts)):
+            raise ValueError("histogram bucket layouts differ")
+        # deterministic lock order (by object id) so concurrent
+        # a.merge(b) / b.merge(a) cannot ABBA-deadlock
+        first, second = sorted((self._lock, other._lock), key=id)
+        with first, second:
+            for i, c in enumerate(other.counts):
+                self.counts[i] += c
+            self.count += other.count
+            self.sum += other.sum
+            self.min = min(self.min, other.min)
+            self.max = max(self.max, other.max)
+
+    def snapshot(self) -> HistogramSnapshot:
+        """Immutable copy under ONE lock acquisition (so count / sum /
+        buckets are mutually consistent even with concurrent recorders).
+        Empty-histogram ``min`` normalizes to None (JSON-safe)."""
+        with self._lock:
+            return HistogramSnapshot(
+                lo=self.lo, growth=self.growth, counts=tuple(self.counts),
+                count=self.count, sum=self.sum,
+                min=None if self.count == 0 else self.min,
+                max=self.max if self.count else 0.0)
+
+    def diff(self, prev: Optional[HistogramSnapshot]) -> HistogramSnapshot:
+        """Interval histogram: samples recorded since ``prev`` was taken.
+
+        Bucket counts, ``count`` and ``sum`` are EXACT (the histogram is
+        append-only, so current minus previous is precisely the interval
+        recording).  ``min``/``max`` cannot be recovered exactly from two
+        cumulative views, so they resolve to the edges of the lowest /
+        highest nonzero interval bucket (clamped by the lifetime max) —
+        the same bucket-bound contract percentiles already have.
+        ``prev=None`` means "diff against empty" == ``snapshot()``.
+        """
+        cur = self.snapshot()
+        if prev is None:
+            return cur
+        if (prev.lo, prev.growth, len(prev.counts)) != \
+                (cur.lo, cur.growth, len(cur.counts)):
+            raise ValueError("histogram bucket layouts differ")
+        dcounts = tuple(c - p for c, p in zip(cur.counts, prev.counts))
+        if any(d < 0 for d in dcounts) or cur.count < prev.count:
+            raise ValueError("prev snapshot is not a prefix of this "
+                             "histogram (was it reset?)")
+        dcount = cur.count - prev.count
+        if dcount == 0:
+            return HistogramSnapshot(cur.lo, cur.growth, dcounts, 0, 0.0,
+                                     None, 0.0)
+        nz = [i for i, d in enumerate(dcounts) if d]
+        dmin = 0.0 if nz[0] == 0 else self.upper_edge(nz[0] - 1)
+        dmax = min(self.upper_edge(nz[-1]), cur.max)
+        return HistogramSnapshot(cur.lo, cur.growth, dcounts, dcount,
+                                 cur.sum - prev.sum, dmin, dmax)
+
+    def to_dict(self) -> Dict[str, float]:
+        return self.snapshot().to_dict()

@@ -1,0 +1,149 @@
+"""Index-health gauges: the paper's distributional claims, measured.
+
+Streaming VQ's §3.2 argument is that merge-sort + penalized assignment
+keep the index BALANCED — most clusters comparably sized, no mega
+cluster — which is what makes the two-step serve cheap (§3.4: scoring
+work ∝ max segment length).  These gauges turn that claim into
+scrape-able numbers computed from a live ``ServingIndex`` /
+``ShardedServingIndex`` snapshot:
+
+  balance (§3.2)
+    ``cluster_entropy``            -sum p_c ln p_c over live counts
+    ``cluster_entropy_ratio``      normalized by ln(K) (1.0 = uniform)
+    ``cluster_imbalance``          max(count) / mean(count)
+    ``cluster_count_max/mean``     raw segment-size extremes
+    ``empty_clusters``             segments with zero live items
+
+  immediacy / churn (§3.1 — the delta path writes into spare capacity
+  and compacts tombstones out of live prefixes)
+    ``live_items``                 sum of live prefix lengths
+    ``segment_capacity``           allocated segment slots (excl. the
+                                   sentinel tail of never-written PS
+                                   slots)
+    ``hole_slots`` / ``hole_ratio`` non-live slots inside segments:
+                                   delta spare headroom plus slots
+                                   vacated by tombstone compaction (the
+                                   two are indistinguishable by design
+                                   — a compacted slot RETURNS to spare;
+                                   cumulative tombstones are counted by
+                                   ``ServeStats.delta_tombstones``)
+
+  sharding (elastic-sharding roadmap item)
+    ``shard_items``                per-shard live item counts (labeled)
+    ``shard_imbalance``            max / mean over shards
+
+Everything is computed with numpy on host copies of the (immutable)
+index arrays, so a gauge read never touches device state; the service
+entry point (``RetrievalService.health_snapshot``) reads the index,
+delta-log version and epoch under the publish lock so the triplet is
+mutually consistent.  ``register_index_health`` exports the gauges
+through a registry collector evaluated at scrape time.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.obs.registry import Family, MetricRegistry
+
+
+def _counts_health(counts: np.ndarray, capacity: np.ndarray
+                   ) -> Dict[str, float]:
+    """Shared gauge math over per-cluster live counts + segment caps."""
+    counts = counts.astype(np.int64).ravel()
+    capacity = capacity.astype(np.int64).ravel()
+    k = int(counts.size)
+    total = int(counts.sum())
+    cap_total = int(capacity.sum())
+    if total > 0:
+        p = counts[counts > 0].astype(np.float64) / total
+        entropy = float(-(p * np.log(p)).sum())
+    else:
+        entropy = 0.0
+    mean = total / k if k else 0.0
+    return dict(
+        n_clusters=float(k),
+        live_items=float(total),
+        segment_capacity=float(cap_total),
+        hole_slots=float(cap_total - total),
+        hole_ratio=float(cap_total - total) / cap_total if cap_total else 0.0,
+        cluster_count_max=float(counts.max(initial=0)),
+        cluster_count_mean=float(mean),
+        cluster_imbalance=float(counts.max(initial=0)) / mean
+        if mean > 0 else 0.0,
+        cluster_entropy=entropy,
+        cluster_entropy_ratio=entropy / math.log(k) if k > 1 else 0.0,
+        empty_clusters=float((counts == 0).sum()),
+    )
+
+
+def index_health(index) -> Dict[str, float]:
+    """Gauges for a single-device ``ServingIndex`` (Appendix-B layout).
+
+    Segment c spans ``[offsets[c], offsets[c+1])`` with ``counts[c]``
+    live slots; the sentinel tail beyond ``offsets[K]`` (never-written
+    PS slots) is not index capacity and is excluded.
+    """
+    offs = np.asarray(index.offsets)
+    counts = np.asarray(index.counts)
+    return _counts_health(counts, offs[1:] - offs[:-1])
+
+
+def sharded_index_health(sidx) -> Dict[str, float]:
+    """Gauges for a ``ShardedServingIndex`` + per-shard distribution."""
+    offs = np.asarray(sidx.offsets)             # (D, Ks+1)
+    counts = np.asarray(sidx.counts)            # (D, Ks)
+    out = _counts_health(counts, offs[:, 1:] - offs[:, :-1])
+    shard_items = counts.astype(np.int64).sum(axis=1)
+    mean = float(shard_items.mean()) if shard_items.size else 0.0
+    out["n_shards"] = float(sidx.n_shards)
+    out["shard_imbalance"] = (float(shard_items.max(initial=0)) / mean
+                              if mean > 0 else 0.0)
+    out["shard_items"] = [float(x) for x in shard_items]
+    return out
+
+
+def health_of(index) -> Dict[str, float]:
+    """Dispatch on layout (duck-typed: sharded indexes carry
+    ``item_base``, the single-device layout does not)."""
+    if hasattr(index, "item_base"):
+        return sharded_index_health(index)
+    return index_health(index)
+
+
+def register_index_health(reg: MetricRegistry, health_fn,
+                          namespace: str = "svq_index") -> None:
+    """Export ``health_fn() -> gauges dict`` as a scrape-time collector.
+
+    ``health_fn`` is typically ``RetrievalService.health_snapshot``
+    (computed under the publish lock); plain ``lambda: health_of(idx)``
+    works for a static index.
+    """
+    ns = namespace
+
+    def _collect() -> List[Family]:
+        gauges = health_fn()
+        fams: List[Family] = []
+        shard_items = gauges.pop("shard_items", None)
+        for key in sorted(gauges):
+            fams.append(Family(f"{ns}_{key}", "gauge", "",
+                               [({}, float(gauges[key]))]))
+        if shard_items is not None:
+            fams.append(Family(
+                f"{ns}_shard_items", "gauge",
+                "live items per shard (elastic-sharding signal)",
+                [({"shard": str(d)}, float(v))
+                 for d, v in enumerate(shard_items)]))
+        return fams
+
+    reg.register_collector(_collect)
+
+
+def service_health(service, now: Optional[float] = None) -> Dict[str, float]:
+    """Gauges for a live ``RetrievalService``: index gauges plus the
+    generation / delta-log freshness view, read as one consistent
+    triplet under the publish lock (see ``health_snapshot``)."""
+    return service.health_snapshot(now=now)

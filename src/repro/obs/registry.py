@@ -1,0 +1,426 @@
+"""Labeled metric registry: one substrate for every telemetry source.
+
+The paper's headline properties are distributional claims — index
+*balance* (§3.2), *immediacy/freshness* (§3.1), serve-tail shape
+(§3.4/Appendix B) — but until now each lived in its own ad-hoc object
+(``ServeStats`` histograms, swap staleness counters, delta/freshness
+counters, train-loop stage histograms).  ``MetricRegistry`` gives them
+one registration surface with three instrument kinds:
+
+  counter     monotone float, native (``inc``) or callback-backed
+              (``counter_fn`` wraps an existing exact counter such as
+              ``ServeStats.n_requests`` without migrating its locking),
+  gauge       point-in-time float, native (``set``) or callback-backed,
+  histogram   a ``LatencyHistogram`` (registered as-is, so the serving
+              path keeps recording into the object it already owns).
+
+Labels are first-class: ``reg.counter("x_total", labels=("shard",))``
+returns a family whose ``labels(shard="3")`` children are created on
+demand.  ``register_collector`` covers dynamic families (per-stage
+histograms appear lazily; index-health gauges are computed at scrape
+time).
+
+Two read views:
+
+  ``snapshot()``        current value of everything (histograms as
+                        ``HistogramSnapshot``),
+  ``diff(prev)``        interval view between a past snapshot and now:
+                        counter deltas and interval histograms
+                        (``LatencyHistogram.diff``), i.e. rates and
+                        "p99 over the last scrape period".
+
+The registry itself never imports serving code — it duck-types over
+histogram objects — so it sits below ``repro.serving`` in the import
+graph and both the serving and training layers can register into it.
+"""
+from __future__ import annotations
+
+import re
+import threading
+from typing import (Callable, Dict, Iterable, List, NamedTuple, Optional,
+                    Sequence, Tuple)
+
+from repro.obs.histogram import HistogramSnapshot, LatencyHistogram
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+
+
+def _check_name(name: str) -> str:
+    if not _NAME_RE.match(name):
+        raise ValueError(f"invalid metric name {name!r}")
+    return name
+
+
+class Counter:
+    """Monotone native counter (own lock -> exact under concurrency)."""
+
+    __slots__ = ("_lock", "_value")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        if n < 0:
+            raise ValueError("counters only go up")
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+
+class Gauge:
+    """Point-in-time native gauge."""
+
+    __slots__ = ("_lock", "_value")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._value = 0.0
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self._value = float(v)
+
+    def inc(self, n: float = 1.0) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+
+LabelDict = Dict[str, str]
+# one exported time series: (label dict, float | HistogramSnapshot)
+SeriesValue = Tuple[LabelDict, object]
+
+
+class Family(NamedTuple):
+    """One metric family ready for export."""
+    name: str
+    mtype: str                     # "counter" | "gauge" | "histogram"
+    help: str
+    series: List[SeriesValue]
+
+
+class _Instrument:
+    """Registered family of native / callback instruments."""
+
+    def __init__(self, name: str, mtype: str, help_: str,
+                 label_names: Tuple[str, ...], factory=None,
+                 fn: Optional[Callable[[], float]] = None):
+        self.name = name
+        self.mtype = mtype
+        self.help = help_
+        self.label_names = label_names
+        self._factory = factory
+        self._fn = fn
+        self._lock = threading.Lock()
+        self._children: Dict[Tuple[str, ...], object] = {}
+        if factory is not None and not label_names:
+            self._children[()] = factory()
+
+    # -- label handling ----------------------------------------------------
+    def labels(self, **kv: str):
+        if tuple(sorted(kv)) != tuple(sorted(self.label_names)):
+            raise ValueError(
+                f"{self.name}: expected labels {self.label_names}, "
+                f"got {tuple(kv)}")
+        key = tuple(str(kv[k]) for k in self.label_names)
+        with self._lock:
+            child = self._children.get(key)
+            if child is None:
+                child = self._children[key] = self._factory()
+            return child
+
+    @property
+    def default(self):
+        """The unlabeled child (only for label-less families)."""
+        if self.label_names:
+            raise ValueError(f"{self.name} requires labels "
+                             f"{self.label_names}")
+        return self._children[()]
+
+    # convenience passthroughs for the common unlabeled case
+    def inc(self, n: float = 1.0) -> None:
+        self.default.inc(n)
+
+    def set(self, v: float) -> None:
+        self.default.set(v)
+
+    def record(self, seconds: float, n: int = 1) -> None:
+        self.default.record(seconds, n)
+
+    # -- reading -----------------------------------------------------------
+    def _value_of(self, child) -> object:
+        if hasattr(child, "snapshot"):           # histogram
+            return child.snapshot()
+        return child.value
+
+    def family(self) -> Family:
+        if self._fn is not None:
+            return Family(self.name, self.mtype, self.help,
+                          [({}, float(self._fn()))])
+        with self._lock:
+            items = sorted(self._children.items())
+        series = [(dict(zip(self.label_names, key)), self._value_of(ch))
+                  for key, ch in items]
+        return Family(self.name, self.mtype, self.help, series)
+
+
+Collector = Callable[[], Iterable[Family]]
+
+
+class MetricRegistry:
+    """Name-unique registry of instruments + scrape-time collectors."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._instruments: Dict[str, _Instrument] = {}
+        self._collectors: List[Collector] = []
+
+    # -- registration ------------------------------------------------------
+    def _register(self, inst: _Instrument,
+                  exist_ok: bool = False) -> _Instrument:
+        _check_name(inst.name)
+        for ln in inst.label_names:
+            if not _LABEL_RE.match(ln):
+                raise ValueError(f"invalid label name {ln!r}")
+        with self._lock:
+            have = self._instruments.get(inst.name)
+            if have is not None:
+                if exist_ok:
+                    return have
+                raise ValueError(f"metric {inst.name!r} already registered")
+            self._instruments[inst.name] = inst
+            return inst
+
+    def counter(self, name: str, help: str = "",
+                labels: Sequence[str] = (),
+                exist_ok: bool = False) -> _Instrument:
+        return self._register(
+            _Instrument(name, "counter", help, tuple(labels), Counter),
+            exist_ok)
+
+    def gauge(self, name: str, help: str = "", labels: Sequence[str] = (),
+              exist_ok: bool = False) -> _Instrument:
+        return self._register(
+            _Instrument(name, "gauge", help, tuple(labels), Gauge),
+            exist_ok)
+
+    def counter_fn(self, name: str, fn: Callable[[], float],
+                   help: str = "", exist_ok: bool = False) -> _Instrument:
+        """Callback counter: wraps an existing exact counter in place."""
+        return self._register(
+            _Instrument(name, "counter", help, (), fn=fn), exist_ok)
+
+    def gauge_fn(self, name: str, fn: Callable[[], float], help: str = "",
+                 exist_ok: bool = False) -> _Instrument:
+        return self._register(
+            _Instrument(name, "gauge", help, (), fn=fn), exist_ok)
+
+    def histogram(self, name: str, help: str = "",
+                  labels: Sequence[str] = (),
+                  hist: Optional[LatencyHistogram] = None,
+                  exist_ok: bool = False) -> _Instrument:
+        """Register a (new or EXISTING) ``LatencyHistogram`` family.
+
+        Passing ``hist`` adopts an already-recording histogram (e.g.
+        ``ServeStats.latency``) without copying or re-locking it.
+        """
+        if hist is not None and labels:
+            raise ValueError("hist= and labels= are mutually exclusive")
+        inst = _Instrument(name, "histogram", help, tuple(labels),
+                           LatencyHistogram)
+        if hist is not None:
+            inst._children[()] = hist
+        return self._register(inst, exist_ok)
+
+    def register_collector(self, fn: Collector) -> Collector:
+        """Scrape-time family source (dynamic labels, computed gauges)."""
+        with self._lock:
+            self._collectors.append(fn)
+        return fn
+
+    def unregister(self, name: str) -> bool:
+        with self._lock:
+            return self._instruments.pop(name, None) is not None
+
+    # -- reading -----------------------------------------------------------
+    def collect(self) -> List[Family]:
+        """Every family, instruments first then collectors, name-sorted
+        within each source for deterministic export."""
+        with self._lock:
+            insts = sorted(self._instruments.values(),
+                           key=lambda i: i.name)
+            collectors = list(self._collectors)
+        fams = [i.family() for i in insts]
+        for c in collectors:
+            fams.extend(c())
+        return fams
+
+    def snapshot(self) -> Dict[str, Dict[str, object]]:
+        """{series key: {"type", "value"}}; histograms keep their
+        ``HistogramSnapshot`` so ``diff`` can subtract buckets."""
+        out: Dict[str, Dict[str, object]] = {}
+        for fam in self.collect():
+            for labels, value in fam.series:
+                out[_series_key(fam.name, labels)] = dict(
+                    type=fam.mtype, value=value)
+        return out
+
+    def diff(self, prev: Dict[str, Dict[str, object]]
+             ) -> Dict[str, Dict[str, object]]:
+        """Interval (rate) view vs a previous ``snapshot()``:
+
+          counters    value - prev value (new series diff vs 0),
+          gauges      current value (a gauge has no rate),
+          histograms  interval snapshot via bucket subtraction.
+        """
+        cur = self.snapshot()
+        out: Dict[str, Dict[str, object]] = {}
+        for key, entry in cur.items():
+            mtype, value = entry["type"], entry["value"]
+            p = prev.get(key)
+            if mtype == "counter":
+                pv = float(p["value"]) if p else 0.0
+                out[key] = dict(type=mtype, value=float(value) - pv)
+            elif mtype == "histogram":
+                pv = p["value"] if p else None
+                out[key] = dict(type=mtype,
+                                value=_diff_snapshots(value, pv))
+            else:
+                out[key] = dict(type=mtype, value=value)
+        return out
+
+    def snapshot_jsonable(self) -> Dict[str, object]:
+        """JSON-safe flattening (histograms -> summary dicts)."""
+        return to_jsonable(self.snapshot())
+
+
+def _series_key(name: str, labels: LabelDict) -> str:
+    if not labels:
+        return name
+    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    return f"{name}{{{inner}}}"
+
+
+def _diff_snapshots(cur: HistogramSnapshot,
+                    prev: Optional[HistogramSnapshot]) -> HistogramSnapshot:
+    if prev is None:
+        return cur
+    dcounts = tuple(c - p for c, p in zip(cur.counts, prev.counts))
+    dcount = cur.count - prev.count
+    if any(d < 0 for d in dcounts) or dcount < 0:
+        raise ValueError("prev snapshot is not a prefix (histogram reset?)")
+    if dcount == 0:
+        return HistogramSnapshot(cur.lo, cur.growth, dcounts, 0, 0.0,
+                                 None, 0.0)
+    nz = [i for i, d in enumerate(dcounts) if d]
+    dmin = 0.0 if nz[0] == 0 else cur.lo * cur.growth ** (nz[0] - 1)
+    dmax = min(cur.lo * cur.growth ** nz[-1], cur.max)
+    return HistogramSnapshot(cur.lo, cur.growth, dcounts, dcount,
+                             cur.sum - prev.sum, dmin, dmax)
+
+
+def to_jsonable(snap: Dict[str, Dict[str, object]]) -> Dict[str, object]:
+    out: Dict[str, object] = {}
+    for key, entry in snap.items():
+        v = entry["value"]
+        out[key] = v.to_dict() if isinstance(v, HistogramSnapshot) else v
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Adapters for the existing telemetry objects
+# ---------------------------------------------------------------------------
+
+def register_serve_stats(reg: MetricRegistry, stats,
+                         namespace: str = "svq",
+                         exist_ok: bool = False) -> None:
+    """Register a ``ServeStats``-shaped object (duck-typed: the serving
+    AND train-loop telemetry both use it) into ``reg``.
+
+    Exposes the exact counters via callbacks (their mutation stays under
+    the owning service's lock), the latency / freshness histograms
+    as-is, and the lazily-created per-stage histogram dict through a
+    collector so stages registered after this call still export.
+    """
+    ns = namespace
+    with reg._lock:
+        already = f"{ns}_requests_total" in reg._instruments
+    if already:
+        # a previous registration owns this namespace (callbacks point at
+        # ITS stats object); bail out entirely so the histogram collector
+        # is not duplicated
+        if exist_ok:
+            return
+        raise ValueError(f"namespace {ns!r} already registered")
+    counters = [
+        ("requests_total", "serve requests completed", "n_requests"),
+        ("batches_total", "jitted serve calls", "n_batches"),
+        ("index_rebuilds_total", "index generations built",
+         "index_rebuilds"),
+        ("index_swaps_total", "model dump swaps (§3.1 cadence)",
+         "index_swaps"),
+        ("stale_serves_total",
+         "serves returned after a newer generation published",
+         "stale_serves"),
+        ("stale_builds_total", "builds dropped by the swap ticket guard",
+         "stale_builds"),
+        ("delta_applies_total", "delta batches applied live",
+         "delta_applies"),
+        ("delta_items_total", "items (re)published via deltas",
+         "delta_items"),
+        ("delta_tombstones_total",
+         "occupants evicted (tombstoned) by delta applies",
+         "delta_tombstones"),
+        ("delta_compactions_total", "forced rebuilds on spare overflow",
+         "delta_compactions"),
+    ]
+    for suffix, help_, attr in counters:
+        if hasattr(stats, attr):
+            reg.counter_fn(f"{ns}_{suffix}",
+                           (lambda a=attr: float(getattr(stats, a))),
+                           help=help_, exist_ok=exist_ok)
+    for suffix, help_, attr in [
+            ("index_generation", "epoch of the last index served",
+             "generation"),
+            ("delta_log_version", "DeltaLog version of the last publish",
+             "delta_version")]:
+        if hasattr(stats, attr):
+            reg.gauge_fn(f"{ns}_{suffix}",
+                         (lambda a=attr: float(getattr(stats, a))),
+                         help=help_, exist_ok=exist_ok)
+    # Histograms go through a collector, not by-reference adoption:
+    # ``reset_timings()`` REPLACES the histogram objects, and per-stage
+    # histograms are created lazily, so both must be re-resolved from
+    # ``stats`` at scrape time.
+    def _hists() -> List[Family]:
+        fams: List[Family] = []
+        if hasattr(stats, "latency"):
+            fams.append(Family(f"{ns}_serve_latency_seconds", "histogram",
+                               "serve_batch wall time",
+                               [({}, stats.latency.snapshot())]))
+        if hasattr(stats, "freshness"):
+            fams.append(Family(
+                f"{ns}_freshness_seconds", "histogram",
+                "assignment write -> first retrievable publish "
+                "(§3.1 index immediacy)",
+                [({}, stats.freshness.snapshot())]))
+        if hasattr(stats, "stages"):
+            with stats._stage_lock:
+                items = sorted(stats.stages.items())
+            fams.append(Family(f"{ns}_stage_latency_seconds", "histogram",
+                               "per-stage serving/training latencies",
+                               [({"stage": k}, h.snapshot())
+                                for k, h in items]))
+        return fams
+
+    reg.register_collector(_hists)

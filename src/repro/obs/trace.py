@@ -1,0 +1,228 @@
+"""Lightweight request tracing for the serving pipeline.
+
+One *trace* is the life of one serve request: a unique trace ID plus
+the named *spans* it passed through — queue wait in the micro-batcher,
+the per-shard cluster-ranking stage, the Alg. 1 merge, and the ranking
+step (§3.4's "scoring-then-ranking" pipeline, observable per request).
+Traces are cheap host objects: a span is a (name, start, end, thread)
+record on ``time.monotonic()``; recording one is two clock reads and a
+list append, so the serve path stays benchmarkably flat when tracing is
+on (see ``benchmarks/bench_observability.py``).
+
+Completed traces land in a LOCK-EXACT bounded ring buffer: with
+capacity R, after finishing N traces the buffer holds exactly the last
+``min(N, R)`` and ``n_dropped == max(N - R, 0)`` — no tolerance, which
+the concurrency suite asserts from N threads.
+
+``export_chrome_trace()`` emits Chrome trace-event JSON (the
+"traceEvents" array form) loadable in Perfetto / chrome://tracing;
+every event carries its trace ID in ``args`` so one request's spans
+can be filtered across threads.
+
+``annotate(name)`` is the optional device bridge: when enabled it wraps
+a code region in ``jax.profiler.TraceAnnotation`` (host timeline of a
+device profile) AND ``jax.named_scope`` (HLO metadata), so spans taken
+around the kernel-dispatch sites (``serve_kernel``, ``cluster_rank``,
+``merge_serve``, ``index_sort``) line up with device traces captured by
+``jax.profiler``.  Disabled (the default) it is a no-op with no jax
+call in the hot path.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import itertools
+import json
+import threading
+import time
+from collections import deque
+from typing import Deque, Dict, Iterator, List, Optional
+
+# -- optional device-profile bridging ---------------------------------------
+
+_DEVICE_ANNOTATIONS = False
+
+
+def enable_device_annotations(on: bool = True) -> None:
+    """Bridge ``annotate`` regions into jax device profiles (opt-in;
+    must be set before the annotated functions are traced/compiled for
+    the ``named_scope`` half to reach the HLO)."""
+    global _DEVICE_ANNOTATIONS
+    _DEVICE_ANNOTATIONS = bool(on)
+
+
+def device_annotations_enabled() -> bool:
+    return _DEVICE_ANNOTATIONS
+
+
+@contextlib.contextmanager
+def annotate(name: str):
+    """No-op unless ``enable_device_annotations()`` was called."""
+    if not _DEVICE_ANNOTATIONS:
+        yield
+        return
+    import jax
+    with jax.profiler.TraceAnnotation(name), jax.named_scope(name):
+        yield
+
+
+# -- spans + traces ---------------------------------------------------------
+
+@dataclasses.dataclass
+class Span:
+    """One named interval on the ``time.monotonic()`` clock."""
+    name: str
+    t_start: float
+    t_end: float
+    thread_id: int = 0
+    attrs: Optional[Dict[str, object]] = None
+
+    @property
+    def duration_s(self) -> float:
+        return self.t_end - self.t_start
+
+
+def make_span(name: str, t_start: float, t_end: Optional[float] = None,
+              **attrs) -> Span:
+    return Span(name=name, t_start=t_start,
+                t_end=time.monotonic() if t_end is None else t_end,
+                thread_id=threading.get_ident(),
+                attrs=attrs or None)
+
+
+class Trace:
+    """One request's spans under one trace ID (single-writer: the
+    thread driving the request appends; the ring buffer owns it only
+    after ``Tracer.finish``)."""
+
+    __slots__ = ("trace_id", "name", "t_start", "t_end", "spans", "attrs")
+
+    def __init__(self, trace_id: int, name: str,
+                 attrs: Optional[Dict[str, object]] = None):
+        self.trace_id = trace_id
+        self.name = name
+        self.t_start = time.monotonic()
+        self.t_end: Optional[float] = None
+        self.spans: List[Span] = []
+        self.attrs: Dict[str, object] = dict(attrs or {})
+
+    def add_span(self, span: Span) -> Span:
+        self.spans.append(span)
+        return span
+
+    @contextlib.contextmanager
+    def span(self, name: str, **attrs) -> Iterator[Span]:
+        t0 = time.monotonic()
+        s = make_span(name, t0, t0, **attrs)
+        try:
+            yield s
+        finally:
+            s.t_end = time.monotonic()
+            self.spans.append(s)
+
+    @property
+    def duration_s(self) -> float:
+        end = self.t_end if self.t_end is not None else time.monotonic()
+        return end - self.t_start
+
+
+class Tracer:
+    """Trace factory + bounded completed-trace ring buffer.
+
+    ``sample_every=k`` keeps tracing affordable under heavy traffic:
+    every k-th started request is traced (deterministic counter, not a
+    PRNG, so tests and benchmarks are reproducible); ``k=1`` traces all.
+    ``enabled=False`` short-circuits every entry point to one branch.
+    """
+
+    def __init__(self, capacity: int = 1024, enabled: bool = True,
+                 sample_every: int = 1):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        if sample_every < 1:
+            raise ValueError("sample_every must be >= 1")
+        self.capacity = capacity
+        self.enabled = enabled
+        self.sample_every = sample_every
+        self._ids = itertools.count(1)
+        self._sample = itertools.count()
+        self._lock = threading.Lock()
+        self._ring: Deque[Trace] = deque()
+        self.n_started = 0
+        self.n_finished = 0
+        self.n_dropped = 0
+
+    # -- lifecycle ---------------------------------------------------------
+    def should_sample(self) -> bool:
+        """One deterministic sampling decision (call once per request)."""
+        if not self.enabled:
+            return False
+        return next(self._sample) % self.sample_every == 0
+
+    def start_trace(self, name: str, **attrs) -> Trace:
+        with self._lock:
+            self.n_started += 1
+        return Trace(next(self._ids), name, attrs)
+
+    def finish(self, trace: Trace) -> None:
+        """Complete a trace into the ring (drop-oldest, lock-exact)."""
+        if trace.t_end is None:
+            trace.t_end = time.monotonic()
+        with self._lock:
+            if len(self._ring) >= self.capacity:
+                self._ring.popleft()
+                self.n_dropped += 1
+            self._ring.append(trace)
+            self.n_finished += 1
+
+    # -- reading -----------------------------------------------------------
+    def traces(self) -> List[Trace]:
+        """Snapshot of completed traces, oldest first."""
+        with self._lock:
+            return list(self._ring)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._ring.clear()
+
+    def find(self, trace_id: int) -> Optional[Trace]:
+        with self._lock:
+            for t in self._ring:
+                if t.trace_id == trace_id:
+                    return t
+        return None
+
+    # -- export ------------------------------------------------------------
+    def export_chrome_trace(self) -> Dict[str, object]:
+        """Chrome trace-event JSON (Perfetto / chrome://tracing).
+
+        Complete events (``ph: "X"``) with microsecond timestamps on the
+        shared monotonic clock; each event's ``args.trace_id`` names the
+        owning request so one request filters cleanly across threads.
+        """
+        events: List[Dict[str, object]] = []
+        for t in self.traces():
+            end = t.t_end if t.t_end is not None else t.t_start
+            events.append(dict(
+                ph="X", cat="request", name=t.name, pid=1,
+                tid=t.spans[0].thread_id if t.spans
+                else threading.get_ident(),
+                ts=t.t_start * 1e6, dur=max(end - t.t_start, 0.0) * 1e6,
+                args=dict(trace_id=t.trace_id, **t.attrs)))
+            for s in t.spans:
+                args: Dict[str, object] = dict(trace_id=t.trace_id)
+                if s.attrs:
+                    args.update(s.attrs)
+                events.append(dict(
+                    ph="X", cat="span", name=s.name, pid=1,
+                    tid=s.thread_id, ts=s.t_start * 1e6,
+                    dur=max(s.duration_s, 0.0) * 1e6, args=args))
+        return dict(traceEvents=events, displayTimeUnit="ms")
+
+    def export_chrome_trace_json(self, path: Optional[str] = None) -> str:
+        """Serialize; optionally write to ``path`` (Perfetto-loadable)."""
+        text = json.dumps(self.export_chrome_trace())
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text

@@ -22,12 +22,21 @@ File -> paper-section map:
                 completion of the §3.1 "index immediacy" property.
   telemetry.py  Lock-exact counters + log-spaced latency histograms:
                 makes the serve_p99 shape of Appendix B benchmarkable.
+
+The observability layer (``repro.obs``: request tracing, metric
+registry, index-health gauges, Prometheus exporter) sits BELOW this
+package in the import graph; wire a service into it via
+``RetrievalService(..., tracer=obs.Tracer())`` +
+``service.register_metrics()`` + ``obs.start_exporter(registry)``.
 """
 from repro.serving.batcher import MicroBatcher, ServeFuture
 from repro.serving.deltas import (DeltaBatch, DeltaLog,
                                   SpareCapacityExceeded, apply_deltas,
-                                  apply_deltas_sharded, extract_deltas,
-                                  np_hash_ids, write_back)
+                                  apply_deltas_batched,
+                                  apply_deltas_sharded,
+                                  apply_deltas_sharded_batched,
+                                  extract_deltas, np_hash_ids,
+                                  write_back)
 from repro.serving.service import RetrievalService, drive_requests
 from repro.serving.sharding import (ShardedServingIndex,
                                     place_sharded_index,

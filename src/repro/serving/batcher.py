@@ -28,6 +28,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import trace as trace_lib
 from repro.serving.telemetry import ServeStats
 
 
@@ -77,15 +78,17 @@ class ServeFuture:
 
 
 class _Pending:
-    __slots__ = ("batch", "rows", "task", "future", "t_enqueue")
+    __slots__ = ("batch", "rows", "task", "future", "t_enqueue", "trace")
 
     def __init__(self, batch: Dict[str, np.ndarray], rows: int, task: int,
-                 future: ServeFuture):
+                 future: ServeFuture,
+                 trace: Optional[trace_lib.Trace] = None):
         self.batch = batch
         self.rows = rows
         self.task = task
         self.future = future
         self.t_enqueue = time.monotonic()
+        self.trace = trace
 
 
 class MicroBatcher:
@@ -100,17 +103,23 @@ class MicroBatcher:
                                           Dict[str, np.ndarray]],
                  max_batch: int = 64, max_delay_s: float = 0.002,
                  buckets: Optional[Sequence[int]] = None,
-                 stats: Optional[ServeStats] = None):
+                 stats: Optional[ServeStats] = None,
+                 tracer: Optional[trace_lib.Tracer] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self._serve_fn = serve_fn
         # serve fns that accept ``n_valid`` get the REAL row count, so
-        # their request counters exclude the bucket-padding rows
+        # their request counters exclude the bucket-padding rows; fns
+        # that accept ``span_sink`` get per-flush stage spans back, which
+        # are fanned out to every traced request in the flush group
         try:
-            self._pass_n_valid = "n_valid" in \
-                inspect.signature(serve_fn).parameters
+            sig_params = inspect.signature(serve_fn).parameters
+            self._pass_n_valid = "n_valid" in sig_params
+            self._pass_span_sink = "span_sink" in sig_params
         except (TypeError, ValueError):            # pragma: no cover
             self._pass_n_valid = False
+            self._pass_span_sink = False
+        self.tracer = tracer
         self.max_batch = max_batch
         self.max_delay_s = max_delay_s
         self.buckets = tuple(sorted(set(buckets or
@@ -143,10 +152,16 @@ class MicroBatcher:
             raise ValueError(f"request rows must be in [1, {self.max_batch}]"
                              f", got {rows}")
         fut = ServeFuture()
+        # the sampling decision happens at SUBMIT, so a trace's clock
+        # starts before the queue and queue_wait is part of the trace
+        trace = None
+        if self.tracer is not None and self.tracer.should_sample():
+            trace = self.tracer.start_trace("request", rows=rows,
+                                            task=task)
         with self._cond:
             if self._closed:
                 raise RuntimeError("batcher is closed")
-            self._pending.append(_Pending(batch, rows, task, fut))
+            self._pending.append(_Pending(batch, rows, task, fut, trace))
             self._cond.notify()
         return fut
 
@@ -210,6 +225,15 @@ class MicroBatcher:
         rows = sum(p.rows for p in group)
         for p in group:
             self.stats.stage("queue_wait").record(t_flush - p.t_enqueue)
+            if p.trace is not None:
+                p.trace.add_span(trace_lib.make_span(
+                    "queue_wait", p.t_enqueue, t_flush))
+        # one stage-span sink per flush: the jit call is shared, so its
+        # stage spans are shared verbatim by every traced request in the
+        # group (each trace re-stamps them with its own trace ID at
+        # export time)
+        traced = [p for p in group if p.trace is not None]
+        sink = [] if (traced and self._pass_span_sink) else None
         try:
             # batch assembly stays inside the error path: a malformed
             # request (mismatched keys/shapes across the group) must
@@ -224,14 +248,24 @@ class MicroBatcher:
                     pad = np.repeat(cat[:1], bucket - rows, axis=0)
                     cat = np.concatenate([cat, pad], axis=0)
                 batch[k] = cat
+            kwargs = {}
             if self._pass_n_valid:
-                out = self._serve_fn(batch, task, n_valid=rows)
-            else:
-                out = self._serve_fn(batch, task)
+                kwargs["n_valid"] = rows
+            if sink is not None:
+                kwargs["span_sink"] = sink
+            out = self._serve_fn(batch, task, **kwargs)
         except BaseException as e:
             for p in group:
                 p.future._set_error(e)
+                if p.trace is not None:
+                    p.trace.attrs["error"] = repr(e)
+                    self.tracer.finish(p.trace)
             return
+        for p in traced:
+            if sink:
+                p.trace.spans.extend(sink)
+            p.trace.attrs["flush_rows"] = rows
+            self.tracer.finish(p.trace)
         self.stats.stage("batcher_flush").record(time.monotonic() - t_flush)
         self.n_flushes += 1
         if deadline_flush:

@@ -218,16 +218,251 @@ def _segment_insert(ids: np.ndarray, bias: np.ndarray,
 # ---------------------------------------------------------------------------
 # Whole-index application
 # ---------------------------------------------------------------------------
+#
+# Two implementations with IDENTICAL semantics (the parity test in
+# tests/test_deltas.py asserts bit-equality on randomized interleavings):
+#
+#   apply_deltas[_sharded]        batched numpy: one routing pass over
+#                                 the row list, then one fused
+#                                 check+lexsort-rebuild per AFFECTED
+#                                 cluster segment — no per-row Python,
+#                                 no per-row array shifts,
+#   apply_deltas[_sharded]_loop   the original per-row sequential edit,
+#                                 kept as the executable oracle.
+#
+# Why one lexsort per segment reproduces the sequential sorted-inserts
+# exactly: store slots are unique within a batch (``extract_deltas``
+# dedupes by slot) and an item's slot is a deterministic hash of its id,
+# so (a) a row's remove target can only be touched by that same row —
+# presence at the row's execution time equals presence at batch start,
+# (b) kept and inserted items in a segment all have distinct slots,
+# making the (bias desc, NaN last, slot asc) order a STRICT total order,
+# under which any insertion sequence converges to the unique sorted
+# arrangement.  ``SpareCapacityExceeded`` stays row-exact: every
+# segment's integer capacity-trajectory walk runs even after a failure
+# is found (a later-sorted cluster can hold an earlier-row offender) and
+# the minimal bad row wins — writes only ever touch private copies, so
+# raising after the loop still leaves the published index untouched.
 
-def apply_deltas(index: astore.ServingIndex, batch: DeltaBatch,
-                 n_clusters: int,
-                 store_capacity: int) -> astore.ServingIndex:
+
+_NO_ROWS = np.empty(0, np.int64)
+
+
+def _group_rows(rows: np.ndarray, clusters: np.ndarray) -> dict:
+    """{cluster: its rows, ascending} in one stable argsort pass."""
+    if rows.size == 0:
+        return {}
+    key = clusters[rows]
+    order = np.argsort(key, kind="stable")      # row order kept per key
+    rows_s, key_s = rows[order], key[order]
+    bounds = np.flatnonzero(np.diff(key_s)) + 1
+    starts = np.concatenate([[0], bounds])
+    return {int(k): r for k, r in zip(key_s[starts],
+                                      np.split(rows_s, bounds))}
+
+
+def _route_deltas(batch: DeltaBatch, n_clusters: int):
+    """Group a batch's applicable rows by target cluster.
+
+    Returns ``(affected, rm_rows, ins_rows)``: the sorted unique
+    clusters touched, and per-cluster ascending row-index groups for
+    tombstones / appends.
+    """
+    oc = np.asarray(batch.old_cluster)
+    oid = np.asarray(batch.old_id)
+    nc = np.asarray(batch.new_cluster)
+    nid = np.asarray(batch.new_id)
+    rm = (oid >= 0) & (oc >= 0) & (oc < n_clusters)
+    ins = (nid >= 0) & (nc >= 0) & (nc < n_clusters)
+    rm_rows = _group_rows(np.flatnonzero(rm), oc)
+    ins_rows = _group_rows(np.flatnonzero(ins), nc)
+    affected = np.unique(np.fromiter(
+        (c for group in (rm_rows, ins_rows) for c in group), np.int64,
+        count=len(rm_rows) + len(ins_rows)))
+    return affected, rm_rows, ins_rows
+
+
+def _check_segment(R: np.ndarray, inserts: np.ndarray, oid: np.ndarray,
+                   live_ids: np.ndarray, count0: int, cap: int):
+    """Presence-filter a segment's tombstone rows and walk its live-count
+    trajectory.  Returns ``(applied_R, bad_row)`` where ``bad_row`` is
+    the first append row the sequential applier would refuse (or None).
+    """
+    if R.size:
+        # presence vs the batch-START segment is exact: no other row
+        # can insert/remove this row's target (slot uniqueness).
+        # Broadcast compare beats np.isin at segment scale.
+        R = R[(oid[R][:, None] == live_ids).any(axis=1)]
+    if inserts.size == 0:
+        return R, None
+    # live count at each insert: batch-start count, minus applied
+    # tombstones at earlier-or-equal rows (a row's own remove lands
+    # BEFORE its insert), plus earlier inserts
+    removed_before = np.searchsorted(R, inserts, side="right")
+    before = count0 - removed_before + np.arange(inserts.size)
+    over = before >= cap
+    if over.any():
+        return R, int(inserts[int(np.argmax(over))])
+    return R, None
+
+
+def _segment_order(ids_all: np.ndarray, bias_all: np.ndarray,
+                   slots_all: np.ndarray) -> np.ndarray:
+    """Argsort by (bias desc, NaN last, store-slot asc).
+
+    ``np.lexsort`` runs successive STABLE sorts (slots first, then
+    -bias); stable float sort parks NaNs at the end preserving the
+    slot order of the previous pass, and -0.0 == +0.0 compare equal —
+    exactly the ``_segment_insert`` comparator.
+    """
+    return np.lexsort((slots_all, -bias_all))
+
+
+def apply_deltas_batched(index: astore.ServingIndex, batch: DeltaBatch,
+                         n_clusters: int,
+                         store_capacity: int) -> astore.ServingIndex:
     """Apply a DeltaBatch to a (single-device) ServingIndex.
 
     Pure: returns a fresh index; the input arrays are never mutated, so
     concurrent readers of the published index stay consistent.  Raises
     ``SpareCapacityExceeded`` (input untouched) when an append finds no
-    spare slot.
+    spare slot.  Batched numpy implementation — see the module section
+    comment for the equivalence argument vs ``apply_deltas_loop``.
+    """
+    affected, rm_rows, ins_rows = _route_deltas(batch, n_clusters)
+    offs = np.asarray(index.offsets)
+    counts0 = np.asarray(index.counts)
+    ids0 = np.asarray(index.item_ids)
+    bias0 = np.asarray(index.item_bias)
+    emb0 = np.asarray(index.item_emb)
+    # one host transfer per device array; mutate private copies; one
+    # whole-index hash instead of a per-cluster np_hash_ids call
+    ids, bias, emb = ids0.copy(), bias0.copy(), emb0.copy()
+    clof = np.asarray(index.cluster_of).copy()
+    counts = counts0.copy()
+    slots0 = np_hash_ids(ids0, store_capacity)
+    oid = np.asarray(batch.old_id)
+    nid = np.asarray(batch.new_id)
+    b_bias = np.asarray(batch.bias)
+    b_emb = np.asarray(batch.emb)
+    b_slot = np.asarray(batch.slot)
+    bad_row, bad_cluster = None, -1
+    for c in affected:
+        c = int(c)
+        start, cap = int(offs[c]), int(offs[c + 1] - offs[c])
+        n0 = int(counts0[c])
+        seg_ids = ids0[start:start + n0]
+        R, bad = _check_segment(rm_rows.get(c, _NO_ROWS),
+                                ins_rows.get(c, _NO_ROWS),
+                                oid, seg_ids, n0, cap)
+        if bad is not None:
+            if bad_row is None or bad < bad_row:
+                bad_row, bad_cluster = bad, c
+        if bad_row is not None:
+            continue                    # doomed batch: keep checking only
+        removed = oid[R]
+        keep = (seg_ids[:, None] != removed).all(axis=1) \
+            if removed.size else slice(None)
+        ins = ins_rows.get(c, _NO_ROWS)
+        ids_all = np.concatenate([seg_ids[keep], nid[ins]])
+        bias_all = np.concatenate([bias0[start:start + n0][keep],
+                                   b_bias[ins]])
+        emb_all = np.concatenate([emb0[start:start + n0][keep],
+                                  b_emb[ins]])
+        slots_all = np.concatenate(
+            [slots0[start:start + n0][keep], b_slot[ins]])
+        order = _segment_order(ids_all, bias_all, slots_all)
+        m = ids_all.shape[0]
+        ids[start:start + m] = ids_all[order]
+        bias[start:start + m] = bias_all[order]
+        emb[start:start + m] = emb_all[order]
+        clof[start:start + m] = c
+        ids[start + m:start + cap] = -1
+        bias[start + m:start + cap] = 0.0
+        emb[start + m:start + cap] = 0.0
+        clof[start + m:start + cap] = n_clusters
+        counts[c] = m
+    if bad_row is not None:
+        raise SpareCapacityExceeded(bad_cluster)
+    return index._replace(item_ids=jnp.asarray(ids),
+                          item_bias=jnp.asarray(bias),
+                          item_emb=jnp.asarray(emb),
+                          cluster_of=jnp.asarray(clof),
+                          counts=jnp.asarray(counts))
+
+
+def apply_deltas_sharded_batched(sidx: ShardedServingIndex,
+                                 batch: DeltaBatch, n_clusters: int,
+                                 store_capacity: int,
+                                 mesh=None) -> ShardedServingIndex:
+    """Apply a DeltaBatch to a live ShardedServingIndex (batched numpy).
+
+    Deltas are ROUTED to the owning shard (cluster-major: cluster c
+    lives on shard c // Ks) and applied inside that shard's local
+    segment only.  With a mesh, the updated rows are re-committed to
+    their devices.  Sequential reference: ``apply_deltas_sharded_loop``.
+    """
+    ks = sidx.clusters_per_shard
+    affected, rm_rows, ins_rows = _route_deltas(batch, n_clusters)
+    offs = np.asarray(sidx.offsets)
+    counts0 = np.asarray(sidx.counts)
+    ids0 = np.asarray(sidx.item_ids)
+    bias0 = np.asarray(sidx.item_bias)
+    ids, bias = ids0.copy(), bias0.copy()
+    counts = counts0.copy()
+    slots0 = np_hash_ids(ids0, store_capacity)
+    oid = np.asarray(batch.old_id)
+    nid = np.asarray(batch.new_id)
+    b_bias = np.asarray(batch.bias)
+    b_slot = np.asarray(batch.slot)
+    bad_row, bad_cluster = None, -1
+    for c in affected:
+        c = int(c)
+        d, lc = c // ks, c % ks
+        start = int(offs[d, lc])
+        n0 = int(counts0[d, lc])
+        cap = int(offs[d, lc + 1]) - start
+        seg_ids = ids0[d, start:start + n0]
+        R, bad = _check_segment(rm_rows.get(c, _NO_ROWS),
+                                ins_rows.get(c, _NO_ROWS),
+                                oid, seg_ids, n0, cap)
+        if bad is not None:
+            if bad_row is None or bad < bad_row:
+                bad_row, bad_cluster = bad, c
+        if bad_row is not None:
+            continue                    # doomed batch: keep checking only
+        removed = oid[R]
+        keep = (seg_ids[:, None] != removed).all(axis=1) \
+            if removed.size else slice(None)
+        ins = ins_rows.get(c, _NO_ROWS)
+        ids_all = np.concatenate([seg_ids[keep], nid[ins]])
+        bias_all = np.concatenate([bias0[d, start:start + n0][keep],
+                                   b_bias[ins]])
+        slots_all = np.concatenate(
+            [slots0[d, start:start + n0][keep], b_slot[ins]])
+        order = _segment_order(ids_all, bias_all, slots_all)
+        m = ids_all.shape[0]
+        ids[d, start:start + m] = ids_all[order]
+        bias[d, start:start + m] = bias_all[order]
+        ids[d, start + m:start + cap] = -1
+        bias[d, start + m:start + cap] = 0.0
+        counts[d, lc] = m
+    if bad_row is not None:
+        raise SpareCapacityExceeded(bad_cluster)
+    new = sidx._replace(item_ids=jnp.asarray(ids),
+                        item_bias=jnp.asarray(bias),
+                        counts=jnp.asarray(counts))
+    if mesh is not None:
+        from repro.serving.sharding import place_sharded_index
+        new = place_sharded_index(new, mesh)
+    return new
+
+
+def apply_deltas_loop(index: astore.ServingIndex, batch: DeltaBatch,
+                      n_clusters: int,
+                      store_capacity: int) -> astore.ServingIndex:
+    """Sequential per-row reference applier (the executable oracle the
+    batched ``apply_deltas`` is parity-tested against).
     """
     ids = np.array(index.item_ids)
     bias = np.array(index.item_bias)
@@ -255,16 +490,14 @@ def apply_deltas(index: astore.ServingIndex, batch: DeltaBatch,
                           counts=jnp.asarray(counts))
 
 
-def apply_deltas_sharded(sidx: ShardedServingIndex, batch: DeltaBatch,
-                         n_clusters: int, store_capacity: int,
-                         mesh=None) -> ShardedServingIndex:
-    """Apply a DeltaBatch to a live ShardedServingIndex.
-
-    Deltas are ROUTED to the owning shard (cluster-major: cluster c
-    lives on shard c // Ks) and applied inside that shard's local
-    segment only — a tombstone + append pair whose clusters live on
-    different shards touches exactly those two shard rows.  With a mesh,
-    the updated rows are re-committed to their devices.
+def apply_deltas_sharded_loop(sidx: ShardedServingIndex,
+                              batch: DeltaBatch,
+                              n_clusters: int, store_capacity: int,
+                              mesh=None) -> ShardedServingIndex:
+    """Sequential per-row reference applier for the sharded index (the
+    executable oracle ``apply_deltas_sharded`` is parity-tested
+    against).  A tombstone + append pair whose clusters live on
+    different shards touches exactly those two shard rows.
     """
     D = sidx.n_shards
     ks = sidx.clusters_per_shard
@@ -294,6 +527,42 @@ def apply_deltas_sharded(sidx: ShardedServingIndex, batch: DeltaBatch,
         from repro.serving.sharding import place_sharded_index
         new = place_sharded_index(new, mesh)
     return new
+
+
+def _prefer_batched(batch: DeltaBatch, n_clusters: int) -> bool:
+    """Crossover heuristic: the segment lexsort-rebuild amortizes only
+    when clusters see MULTIPLE edits (roughly rows >= n_clusters); below
+    that the per-row binary insert touches far fewer elements.  Either
+    path is bit-identical, so this trades nothing but time."""
+    return batch.n >= n_clusters
+
+
+def apply_deltas(index: astore.ServingIndex, batch: DeltaBatch,
+                 n_clusters: int,
+                 store_capacity: int) -> astore.ServingIndex:
+    """Apply a DeltaBatch to a (single-device) ServingIndex.
+
+    Pure (input untouched, even on ``SpareCapacityExceeded``).
+    Dispatches between the two bit-identical implementations by batch
+    density: ``apply_deltas_batched`` when enough clusters are edited
+    more than once to amortize whole-segment rebuilds,
+    ``apply_deltas_loop`` for sparse trickle batches.
+    """
+    fn = apply_deltas_batched if _prefer_batched(batch, n_clusters) \
+        else apply_deltas_loop
+    return fn(index, batch, n_clusters, store_capacity)
+
+
+def apply_deltas_sharded(sidx: ShardedServingIndex, batch: DeltaBatch,
+                         n_clusters: int, store_capacity: int,
+                         mesh=None) -> ShardedServingIndex:
+    """Apply a DeltaBatch to a live ShardedServingIndex.  Density
+    dispatcher over the two bit-identical implementations — see
+    ``apply_deltas``."""
+    fn = apply_deltas_sharded_batched \
+        if _prefer_batched(batch, n_clusters) \
+        else apply_deltas_sharded_loop
+    return fn(sidx, batch, n_clusters, store_capacity, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------

@@ -33,6 +33,9 @@ import numpy as np
 from repro.configs.base import SVQConfig
 from repro.core import assignment_store as astore
 from repro.core import retriever
+from repro.obs.index_health import health_of, register_index_health
+from repro.obs import registry as registry_lib
+from repro.obs import trace as trace_lib
 from repro.serving import batcher as batcher_lib
 from repro.serving import deltas as deltas_lib
 from repro.serving import sharding as sharding_lib
@@ -44,7 +47,8 @@ class RetrievalService:
     def __init__(self, cfg: SVQConfig, params, index_state,
                  items_per_cluster: int = 256, use_kernel: bool = False,
                  n_shards: Optional[int] = None, mesh=None,
-                 delta_spare: int = 0):
+                 delta_spare: int = 0,
+                 tracer: Optional[trace_lib.Tracer] = None):
         self.cfg = cfg
         self.items_per_cluster = items_per_cluster
         self.use_kernel = use_kernel
@@ -54,6 +58,11 @@ class RetrievalService:
         # publication (serving/deltas.py) appends into.  0 = dense layout,
         # every immediate apply falls back to a forced compaction rebuild.
         self.delta_spare = delta_spare
+        # request tracer (obs/trace.py): sampled requests run the STAGED
+        # serve path (three jit calls with a sync between stages) so
+        # their spans carry real per-stage wall times; unsampled requests
+        # keep the fused single-jit path.
+        self.tracer = tracer
         self.stats = ServeStats()
         self._lock = threading.Lock()
         self._params = params
@@ -75,13 +84,46 @@ class RetrievalService:
                     p, s, cfg, idx, b,
                     items_per_cluster=items_per_cluster, task=task,
                     use_kernel=use_kernel, mesh=mesh)
+
+            def _stage_rank(p, s, idx, b, task):
+                return sharding_lib.sharded_stage_rank(
+                    p, s, cfg, idx, b, task=task,
+                    use_kernel=use_kernel, mesh=mesh)
+
+            def _stage_merge(idx, s1):
+                return sharding_lib.sharded_stage_merge(
+                    cfg, idx, s1, items_per_cluster=items_per_cluster,
+                    use_kernel=use_kernel, mesh=mesh)
+
+            def _stage_ranking(p, s1, s2, task):
+                return sharding_lib.sharded_stage_ranking(
+                    p, cfg, s1, s2, task=task, mesh=mesh)
         else:
             def _serve(p, s, idx, b, task):
                 return retriever.serve(
                     p, s, cfg, idx, b,
                     items_per_cluster=items_per_cluster, task=task,
                     use_kernel=use_kernel)
+
+            def _stage_rank(p, s, idx, b, task):
+                del idx                        # uniform staged signature
+                return retriever.serve_stage_rank(
+                    p, s, cfg, b, task=task, use_kernel=use_kernel)
+
+            def _stage_merge(idx, s1):
+                return retriever.serve_stage_merge(
+                    cfg, idx, s1, items_per_cluster=items_per_cluster,
+                    use_kernel=use_kernel)
+
+            def _stage_ranking(p, s1, s2, task):
+                return retriever.serve_stage_ranking(p, cfg, s1, s2,
+                                                     task=task)
         self._serve_jit = jax.jit(_serve, static_argnames=("task",))
+        self._stage_rank_jit = jax.jit(_stage_rank,
+                                       static_argnames=("task",))
+        self._stage_merge_jit = jax.jit(_stage_merge)
+        self._stage_ranking_jit = jax.jit(_stage_ranking,
+                                          static_argnames=("task",))
 
     # -- index lifecycle (swap.py) -----------------------------------------
     def _build_index(self):
@@ -236,6 +278,8 @@ class RetrievalService:
             with self._lock:
                 self.stats.delta_applies += 1
                 self.stats.delta_items += batch.n
+                self.stats.delta_tombstones += int(
+                    (batch.old_id >= 0).sum())
                 self.stats.delta_version = entry.version
             return new_index, entry.version
 
@@ -252,24 +296,64 @@ class RetrievalService:
         return holder["entry"].version
 
     # -- request path ----------------------------------------------------------
+    def _serve_staged(self, params, state, index, jbatch, task: int,
+                      sink: List[trace_lib.Span]) -> Dict[str, jnp.ndarray]:
+        """Traced serve: three stage jits with a device sync per stage.
+
+        Stage spans carry REAL wall times (the fused jit hides stage
+        boundaries inside XLA); the numerics are identical because the
+        fused path composes the very same stage functions.
+        """
+        t0 = time.monotonic()
+        s1 = jax.block_until_ready(
+            self._stage_rank_jit(params, state, index, jbatch, task=task))
+        t1 = time.monotonic()
+        sink.append(trace_lib.make_span("shard_rank", t0, t1,
+                                        n_shards=self.n_shards or 1))
+        s2 = jax.block_until_ready(self._stage_merge_jit(index, s1))
+        t2 = time.monotonic()
+        sink.append(trace_lib.make_span("merge", t1, t2))
+        out = jax.block_until_ready(
+            self._stage_ranking_jit(params, s1, s2, task=task))
+        sink.append(trace_lib.make_span("ranking", t2))
+        return out
+
     def serve_batch(self, batch: Dict[str, np.ndarray], task: int = 0,
-                    n_valid: Optional[int] = None) -> Dict[str, np.ndarray]:
+                    n_valid: Optional[int] = None,
+                    span_sink: Optional[List[trace_lib.Span]] = None
+                    ) -> Dict[str, np.ndarray]:
         """Serve one request batch.
 
         ``n_valid`` lets a padding caller (the MicroBatcher) report how
         many leading rows are real so ``stats.n_requests`` stays exact.
+        ``span_sink`` (a list, normally passed by the batcher for traced
+        flushes) selects the staged serve path and receives its per-stage
+        spans; without it, a direct call on a service with a sampling
+        tracer records its own trace.
         """
+        own_trace = None
+        if span_sink is None and self.tracer is not None \
+                and self.tracer.should_sample():
+            own_trace = self.tracer.start_trace(
+                "serve_batch", rows=len(batch["user_id"]), task=task)
+            span_sink = []
         t0 = time.perf_counter()
         with self._lock:
             params, state = self._params, self._index_state
         gen = self._buffer.current()            # atomic epoch-tagged read
+        jbatch = {k: jnp.asarray(v) for k, v in batch.items()}
         t_jit = time.perf_counter()
-        out = self._serve_jit(params, state, gen.index,
-                              {k: jnp.asarray(v) for k, v in batch.items()},
-                              task=task)
+        if span_sink is not None:
+            out = self._serve_staged(params, state, gen.index, jbatch,
+                                     task, span_sink)
+            stage_name = "serve_staged"
+        else:
+            out = self._serve_jit(params, state, gen.index, jbatch,
+                                  task=task)
+            stage_name = "serve_jit"
         out = {k: np.asarray(v) for k, v in out.items()}
         t1 = time.perf_counter()
-        self.stats.stage("serve_jit").record(t1 - t_jit)
+        self.stats.stage(stage_name).record(t1 - t_jit)
         self.stats.latency.record(t1 - t0)
         # counters mutate under the lock so concurrent callers stay exact
         with self._lock:
@@ -280,15 +364,78 @@ class RetrievalService:
             self.stats.generation = gen.epoch
             if gen.epoch < self._buffer.latest_epoch:
                 self.stats.stale_serves += 1
+        if own_trace is not None:
+            own_trace.attrs["generation"] = gen.epoch
+            own_trace.spans.extend(span_sink)
+            self.tracer.finish(own_trace)
         return out
 
     def make_batcher(self, max_batch: int = 64,
                      max_delay_s: float = 0.002,
                      buckets=None) -> batcher_lib.MicroBatcher:
-        """Micro-batching front door sharing this service's telemetry."""
+        """Micro-batching front door sharing this service's telemetry
+        (and tracer: sampled requests get queue-wait + stage spans)."""
         return batcher_lib.MicroBatcher(
             self.serve_batch, max_batch=max_batch,
-            max_delay_s=max_delay_s, buckets=buckets, stats=self.stats)
+            max_delay_s=max_delay_s, buckets=buckets, stats=self.stats,
+            tracer=self.tracer)
+
+    # -- observability surface ---------------------------------------------
+    def health_snapshot(self, now: Optional[float] = None
+                        ) -> Dict[str, float]:
+        """Index-health gauges + freshness view as ONE consistent read.
+
+        The generation tuple and the delta-log version are captured
+        under the publish lock (``with_published``), so the gauges, the
+        epoch age and the delta lag all describe the same instant — a
+        scrape can never see a new index with the old log version.  The
+        gauge math itself (numpy over host copies) runs after the lock
+        is released.
+        """
+        def read(gen):
+            with self._lock:
+                return gen, self._log.version
+        gen, log_version = self._buffer.with_published(read)
+        h = health_of(gen.index)
+        now = time.monotonic() if now is None else now
+        h["index_epoch"] = float(gen.epoch)
+        h["index_age_s"] = max(now - gen.published_at, 0.0)
+        h["delta_version"] = float(gen.delta_version)
+        # delta-log entries appended but not yet folded into the live
+        # index (0 when every immediate apply succeeded)
+        h["delta_log_lag"] = float(log_version - gen.delta_version)
+        return h
+
+    def register_metrics(self, registry: Optional[
+            registry_lib.MetricRegistry] = None,
+            namespace: str = "svq") -> registry_lib.MetricRegistry:
+        """Register this service's full telemetry into a MetricRegistry
+        (ServeStats counters + histograms, index-health gauges, build
+        histogram, tracer ring counters); returns the registry, ready
+        for ``repro.obs.start_exporter``."""
+        reg = registry if registry is not None \
+            else registry_lib.MetricRegistry()
+        registry_lib.register_serve_stats(reg, self.stats,
+                                          namespace=namespace)
+        register_index_health(reg, self.health_snapshot,
+                                         namespace=f"{namespace}_index")
+
+        def _build_hist():
+            return [registry_lib.Family(
+                f"{namespace}_index_build_seconds", "histogram",
+                "index build wall time (candidate scan -> publish)",
+                [({}, self._buffer.build_hist.snapshot())])]
+
+        reg.register_collector(_build_hist)
+        if self.tracer is not None:
+            tracer = self.tracer
+            reg.counter_fn(f"{namespace}_traces_finished_total",
+                           lambda: float(tracer.n_finished),
+                           help="request traces completed into the ring")
+            reg.counter_fn(f"{namespace}_traces_dropped_total",
+                           lambda: float(tracer.n_dropped),
+                           help="oldest traces evicted from the ring")
+        return reg
 
 
 def drive_requests(service: RetrievalService, batches: List[Dict],

@@ -57,6 +57,7 @@ from repro.core.retriever import (IndexState, Params, item_features,
                                   rank_codebook, serve_kernel,
                                   user_features)
 from repro.models.dense import mlp
+from repro.obs import trace
 from repro.utils.sharding import constrain
 
 SHARD_AXIS = "shard"
@@ -168,17 +169,21 @@ def place_sharded_index(sidx: ShardedServingIndex, mesh: Mesh,
         counts=put(sidx.counts, P(axis, None)))
 
 
-def sharded_serve(params: Params, state: IndexState, cfg: SVQConfig,
-                  sidx: ShardedServingIndex, batch: Dict[str, jax.Array],
-                  items_per_cluster: int = 256, task: int = 0,
-                  use_kernel: bool = False,
-                  mesh: Optional[Mesh] = None) -> Dict[str, jax.Array]:
-    """Distributed two-step retrieval, bit-exact vs ``retriever.serve``."""
+def sharded_stage_rank(params: Params, state: IndexState, cfg: SVQConfig,
+                       sidx: ShardedServingIndex,
+                       batch: Dict[str, jax.Array], task: int = 0,
+                       use_kernel: bool = False,
+                       mesh: Optional[Mesh] = None) -> Dict[str, jax.Array]:
+    """Stages 1-2: per-shard cluster ranking + cross-shard merge.
+
+    Mirrors ``retriever.serve_stage_rank`` (same output keys), so the
+    observability layer times the sharded and single-device pipelines
+    through one staged interface; ``sharded_serve`` composes the stage
+    functions op-for-op.
+    """
     D = sidx.n_shards
     ks = sidx.clusters_per_shard
-    cap = sidx.capacity
     C = cfg.clusters_per_query
-    L = items_per_cluster
     n_local = min(C, ks)
 
     user_feat, hist_emb = user_features(params, batch["user_id"],
@@ -189,11 +194,12 @@ def sharded_serve(params: Params, state: IndexState, cfg: SVQConfig,
     # ---- stage 1: per-shard indexing step (local cluster ranking) ------
     e_all = state.vq.embeddings()
     vals_l, ids_l = [], []
-    for d in range(D):
-        e_d = jax.lax.slice_in_dim(e_all, d * ks, (d + 1) * ks)
-        v, i = rank_codebook(e_d, u, n_local, use_kernel=use_kernel)
-        vals_l.append(v)
-        ids_l.append(i + jnp.int32(d * ks))
+    with trace.annotate("cluster_rank"):
+        for d in range(D):
+            e_d = jax.lax.slice_in_dim(e_all, d * ks, (d + 1) * ks)
+            v, i = rank_codebook(e_d, u, n_local, use_kernel=use_kernel)
+            vals_l.append(v)
+            ids_l.append(i + jnp.int32(d * ks))
     # shard-order concat: ties resolve to the lower global cluster id,
     # exactly like the single-device lax.top_k over the full codebook
     vals = constrain(jnp.concatenate(vals_l, axis=1), mesh,
@@ -206,6 +212,22 @@ def sharded_serve(params: Params, state: IndexState, cfg: SVQConfig,
     top_clusters = jnp.take_along_axis(gids, sel, axis=1)        # (B, C)
     top_scores = constrain(top_scores, mesh, P(SHARD_AXIS, None))
     top_clusters = constrain(top_clusters, mesh, P(SHARD_AXIS, None))
+    return dict(user_feat=user_feat, hist_emb=hist_emb,
+                top_scores=top_scores, top_clusters=top_clusters)
+
+
+def sharded_stage_merge(cfg: SVQConfig, sidx: ShardedServingIndex,
+                        s1: Dict[str, jax.Array],
+                        items_per_cluster: int = 256,
+                        use_kernel: bool = False,
+                        mesh: Optional[Mesh] = None
+                        ) -> Dict[str, jax.Array]:
+    """Stages 3-4a: routed slab fetch + Alg. 1 merge + payload gather."""
+    D = sidx.n_shards
+    ks = sidx.clusters_per_shard
+    cap = sidx.capacity
+    L = items_per_cluster
+    top_scores, top_clusters = s1["top_scores"], s1["top_clusters"]
 
     # ---- stage 3: routed slab fetch from the owning shards -------------
     owner = top_clusters // ks                                   # (B, C)
@@ -225,11 +247,12 @@ def sharded_serve(params: Params, state: IndexState, cfg: SVQConfig,
     bias = sidx.item_bias[owner[..., None], lslab]               # (B, C, L)
     bias = constrain(bias, mesh, P(SHARD_AXIS, None, None))
 
-    # ---- stage 4: Alg. 1 merge + ranking step (batch-parallel) ---------
+    # ---- stage 4a: Alg. 1 merge (batch-parallel) -----------------------
     S = cfg.candidates_out
-    pos, msort_scores = serve_kernel(top_scores, bias, lengths,
-                                     cfg.chunk_size, S,
-                                     use_kernel=use_kernel)
+    with trace.annotate("merge_serve"):
+        pos, msort_scores = serve_kernel(top_scores, bias, lengths,
+                                         cfg.chunk_size, S,
+                                         use_kernel=use_kernel)
     valid = pos >= 0
     c_idx = jnp.clip(pos, 0) // L
     i_idx = jnp.clip(pos, 0) % L
@@ -245,16 +268,28 @@ def sharded_serve(params: Params, state: IndexState, cfg: SVQConfig,
     in_tail = flat >= sidx.n_real
     cand_ids = jnp.where(in_tail, jnp.int32(-1),
                          sidx.item_ids[fowner, flocal])
+    return dict(cand_ids=cand_ids, valid=valid,
+                merge_scores=msort_scores)
 
-    # Ranking-step inputs are pinned replicated: a batch-partitioned MLP
-    # forward is NOT bitwise stable (gemm remainder panels reorder the
-    # per-row accumulation), and the bit-exact contract vs the
-    # single-device serve matters more here than parallelizing the small
-    # "VQ Two-tower" head.  Batch-parallel ranking (tolerance-based
-    # parity) is a ROADMAP follow-up.
+
+def sharded_stage_ranking(params: Params, cfg: SVQConfig,
+                          s1: Dict[str, jax.Array],
+                          s2: Dict[str, jax.Array], task: int = 0,
+                          mesh: Optional[Mesh] = None
+                          ) -> Dict[str, jax.Array]:
+    """Stage 4b: the closing ranking step over merged candidates.
+
+    Ranking-step inputs are pinned replicated: a batch-partitioned MLP
+    forward is NOT bitwise stable (gemm remainder panels reorder the
+    per-row accumulation), and the bit-exact contract vs the
+    single-device serve matters more here than parallelizing the small
+    "VQ Two-tower" head.  Batch-parallel ranking (tolerance-based
+    parity) is a ROADMAP follow-up.
+    """
+    cand_ids, valid = s2["cand_ids"], s2["valid"]
     cand_ids = constrain(cand_ids, mesh, P())
-    user_feat = constrain(user_feat, mesh, P())
-    hist_emb = constrain(hist_emb, mesh, P())
+    user_feat = constrain(s1["user_feat"], mesh, P())
+    hist_emb = constrain(s1["hist_emb"], mesh, P())
     cand_cate = jnp.zeros_like(cand_ids)
     item_feat = item_features(params, cand_ids, cand_cate)
     cross = (item_feat[..., :cfg.item_embed_dim]
@@ -267,6 +302,24 @@ def sharded_serve(params: Params, state: IndexState, cfg: SVQConfig,
     return dict(
         item_ids=jnp.take_along_axis(cand_ids, order, axis=1),
         scores=jnp.take_along_axis(rscores, order, axis=1),
-        merge_scores=msort_scores,
+        merge_scores=s2["merge_scores"],
         index_ids=cand_ids,
         valid=jnp.take_along_axis(valid, order, axis=1))
+
+
+def sharded_serve(params: Params, state: IndexState, cfg: SVQConfig,
+                  sidx: ShardedServingIndex, batch: Dict[str, jax.Array],
+                  items_per_cluster: int = 256, task: int = 0,
+                  use_kernel: bool = False,
+                  mesh: Optional[Mesh] = None) -> Dict[str, jax.Array]:
+    """Distributed two-step retrieval, bit-exact vs ``retriever.serve``.
+
+    Composes the three stage functions (rank -> merge -> ranking); under
+    one jit this traces exactly the pre-split op sequence.
+    """
+    s1 = sharded_stage_rank(params, state, cfg, sidx, batch, task=task,
+                            use_kernel=use_kernel, mesh=mesh)
+    s2 = sharded_stage_merge(cfg, sidx, s1,
+                             items_per_cluster=items_per_cluster,
+                             use_kernel=use_kernel, mesh=mesh)
+    return sharded_stage_ranking(params, cfg, s1, s2, task=task, mesh=mesh)

@@ -91,6 +91,20 @@ class DoubleBufferedIndex:
         """Atomic snapshot of the live generation (no lock needed)."""
         return self._gen
 
+    def with_published(self, fn: Callable[[IndexGeneration], Any]) -> Any:
+        """Run ``fn(live generation)`` under the publish lock.
+
+        For MULTI-value consistency: ``current()`` is atomic for the
+        generation tuple itself, but a reader deriving several facts
+        that must agree with each other AND with the absence of an
+        in-flight publish (index gauges + delta version + epoch age in
+        one health snapshot) runs here, serialized against rebuild
+        publication and delta mutation.  ``fn`` must be fast — it blocks
+        the delta path while it runs.
+        """
+        with self._publish_lock:
+            return fn(self._gen)
+
     @property
     def latest_epoch(self) -> int:
         return self._gen.epoch

@@ -2,120 +2,28 @@
 
 The paper serves its index under strict tail-latency limits (§3.4 /
 Appendix B: "scoring-then-ranking under heavy traffic"), so the
-benchmarkable quantity is p99, not the mean.  ``LatencyHistogram`` keeps
-log-spaced buckets (8 per decade from 1 us to ~17 min) with an internal
-lock, so concurrent recorders stay EXACT — after N threads record M
-samples each, ``count == N * M`` with no tolerance.  Percentiles are
-resolved to the bucket's upper edge (a conservative bound: the true
-quantile is <= the reported value, never above it).
+benchmarkable quantity is p99, not the mean.  ``LatencyHistogram`` (now
+canonical in ``repro.obs.histogram``, re-exported here for
+compatibility) keeps log-spaced buckets with an internal lock, so
+concurrent recorders stay EXACT — after N threads record M samples
+each, ``count == N * M`` with no tolerance.
 
 ``ServeStats`` extends the PR-1 counter block with the histograms, the
 double-buffer generation/staleness counters (swap.py), and named
 per-stage histograms (queue wait, jit serve, index rebuild) so a single
-object answers "where does the tail come from?".
+object answers "where does the tail come from?".  Register it into a
+``repro.obs.MetricRegistry`` (``obs.register_serve_stats``) to expose
+everything through the Prometheus exporter.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 import threading
-from typing import Dict, List, Optional
+from typing import Dict
 
+from repro.obs.histogram import HistogramSnapshot, LatencyHistogram
 
-class LatencyHistogram:
-    """Lock-exact latency histogram over log-spaced buckets.
-
-    Bucket 0 holds everything <= ``lo`` seconds; bucket i covers
-    (lo * growth^(i-1), lo * growth^i]; the last bucket is unbounded
-    above.  Exact count / sum / min / max ride along so the mean stays
-    exact even though quantiles are bucket-resolved.
-    """
-
-    def __init__(self, lo: float = 1e-6, growth: float = 10 ** 0.125,
-                 n_buckets: int = 72):
-        self.lo = lo
-        self.growth = growth
-        self._log_growth = math.log(growth)
-        self.counts: List[int] = [0] * n_buckets
-        self.count = 0
-        self.sum = 0.0
-        self.min = math.inf
-        self.max = 0.0
-        self._lock = threading.Lock()
-
-    # -- recording ---------------------------------------------------------
-    def bucket_of(self, seconds: float) -> int:
-        if seconds <= self.lo:
-            return 0
-        i = 1 + int(math.log(seconds / self.lo) / self._log_growth)
-        return min(i, len(self.counts) - 1)
-
-    def upper_edge(self, bucket: int) -> float:
-        return self.lo * self.growth ** bucket
-
-    def record(self, seconds: float, n: int = 1) -> None:
-        """Record ``n`` identical samples of ``seconds`` (n > 1 is the
-        delta-batch case: every item in the batch became retrievable at
-        the same publish instant)."""
-        if n <= 0:
-            return
-        seconds = max(float(seconds), 0.0)
-        b = self.bucket_of(seconds)
-        with self._lock:
-            self.counts[b] += n
-            self.count += n
-            self.sum += seconds * n
-            if seconds < self.min:
-                self.min = seconds
-            if seconds > self.max:
-                self.max = seconds
-
-    # -- reading -----------------------------------------------------------
-    def percentile(self, q: float) -> float:
-        """Upper edge of the bucket holding the q-quantile (0 < q <= 1)."""
-        with self._lock:
-            total = self.count
-            if total == 0:
-                return 0.0
-            rank = max(1, math.ceil(q * total))
-            acc = 0
-            for i, c in enumerate(self.counts):
-                acc += c
-                if acc >= rank:
-                    # clamp the edge to the exact max (tighter + finite
-                    # even when the sample hit the unbounded last bucket)
-                    return min(self.upper_edge(i), self.max)
-            return self.max                          # pragma: no cover
-
-    @property
-    def mean(self) -> float:
-        with self._lock:
-            return self.sum / self.count if self.count else 0.0
-
-    def merge(self, other: "LatencyHistogram") -> None:
-        """Fold ``other`` into self (matching bucket layout required)."""
-        if other is self:
-            raise ValueError("cannot merge a histogram into itself")
-        if (other.lo, other.growth, len(other.counts)) != \
-                (self.lo, self.growth, len(self.counts)):
-            raise ValueError("histogram bucket layouts differ")
-        # deterministic lock order (by object id) so concurrent
-        # a.merge(b) / b.merge(a) cannot ABBA-deadlock
-        first, second = sorted((self._lock, other._lock), key=id)
-        with first, second:
-            for i, c in enumerate(other.counts):
-                self.counts[i] += c
-            self.count += other.count
-            self.sum += other.sum
-            self.min = min(self.min, other.min)
-            self.max = max(self.max, other.max)
-
-    def to_dict(self) -> Dict[str, float]:
-        return dict(count=self.count, mean_ms=self.mean * 1e3,
-                    p50_ms=self.percentile(0.50) * 1e3,
-                    p95_ms=self.percentile(0.95) * 1e3,
-                    p99_ms=self.percentile(0.99) * 1e3,
-                    max_ms=(self.max if self.count else 0.0) * 1e3)
+__all__ = ["HistogramSnapshot", "LatencyHistogram", "ServeStats"]
 
 
 @dataclasses.dataclass
@@ -136,6 +44,12 @@ class ServeStats:
     # incremental delta publication (deltas.py)
     delta_applies: int = 0              # delta batches applied live
     delta_items: int = 0                # items (re)published via deltas
+    # occupants evicted by a delta overwrite (tombstoned out of their old
+    # segment).  After compaction a tombstoned slot is indistinguishable
+    # from spare BY DESIGN (it returns to the spare pool), so the live
+    # tombstone view is ``index_health``'s hole_ratio and this counter is
+    # the cumulative churn record.
+    delta_tombstones: int = 0
     delta_compactions: int = 0          # forced rebuilds on spare overflow
     delta_version: int = 0              # log version of the last serve
     stale_builds: int = 0               # builds dropped by the swap guard
@@ -201,6 +115,7 @@ class ServeStats:
             index_swaps=self.index_swaps,
             generation=self.generation, stale_serves=self.stale_serves,
             delta_applies=self.delta_applies, delta_items=self.delta_items,
+            delta_tombstones=self.delta_tombstones,
             delta_compactions=self.delta_compactions,
             delta_version=self.delta_version,
             stale_builds=self.stale_builds,

@@ -43,6 +43,10 @@ class LoopConfig:
     straggler_factor: float = 3.0
     log_every: int = 0                      # 0 = silent
     stats: Optional[Any] = None             # telemetry.ServeStats sink
+    # obs.MetricRegistry to export ``stats`` into (stage histograms show
+    # up as train_stage_latency_seconds{stage=...}); ignored when
+    # ``stats`` is None
+    registry: Optional[Any] = None
     on_step: Optional[Callable[[int, Any, Any], None]] = None
 
 
@@ -68,6 +72,10 @@ def run_loop(step_fn: Callable[[Any, Any], tuple],
     start_step = 0
     resumed = None
     ckpt = None
+    if cfg.registry is not None and cfg.stats is not None:
+        from repro.obs.registry import register_serve_stats
+        register_serve_stats(cfg.registry, cfg.stats, namespace="train",
+                             exist_ok=True)
     if cfg.ckpt_dir:
         last = ckpt_lib.latest_step(cfg.ckpt_dir)
         if last is not None:

@@ -1,0 +1,54 @@
+"""Shared tiny-service factory for the observability test files.
+
+Builds an untrained (init-only) retriever over a small store so the
+obs suites exercise real serve/jit/delta machinery without paying a
+training run; the numerics are irrelevant to what these tests assert
+(span structure, gauge math, exporter formats).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core import assignment_store as astore
+from repro.core import retriever
+from repro.launch.mesh import make_serving_mesh
+from repro.serving import RetrievalService
+
+
+def tiny_cfg():
+    return get_smoke("svq").with_(n_clusters=8, n_items=512, n_users=64,
+                                  embed_dim=8, clusters_per_query=4,
+                                  candidates_out=16, chunk_size=4)
+
+
+def make_service(tracer=None, n_shards=None, delta_spare=4, seed=0,
+                 n_items=300):
+    """-> (cfg, service, request_batch) over a freshly seeded store."""
+    cfg = tiny_cfg()
+    params, state = retriever.init(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    ids = rng.choice(cfg.n_items, size=n_items,
+                     replace=False).astype(np.int32)
+    store = astore.write(
+        state.store, jnp.asarray(ids),
+        jnp.asarray(rng.integers(0, cfg.n_clusters, n_items), jnp.int32),
+        jnp.asarray(rng.normal(size=(n_items, cfg.embed_dim)), jnp.float32),
+        jnp.asarray(rng.normal(size=n_items), jnp.float32))
+    state = state._replace(store=store)
+    mesh = None
+    if n_shards:
+        n_dev = jax.device_count()
+        if n_dev > 1 and n_dev % n_shards == 0:
+            mesh = make_serving_mesh(n_shards)
+    svc = RetrievalService(cfg, params, state, items_per_cluster=32,
+                           n_shards=n_shards, mesh=mesh,
+                           delta_spare=delta_spare, tracer=tracer)
+    users = np.arange(4) % cfg.n_users
+    batch = dict(
+        user_id=users.astype(np.int32),
+        hist=rng.integers(0, cfg.n_items,
+                          size=(4, cfg.user_hist_len)).astype(np.int32))
+    return cfg, svc, batch

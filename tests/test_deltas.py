@@ -250,6 +250,85 @@ def test_sharded_delta_interleavings_match_oracle(n_shards):
                                    store, build, f"op={op}")
 
 
+@pytest.mark.parametrize("seed", range(5))
+def test_vectorized_apply_bit_matches_loop_reference(seed):
+    """The batched-numpy ``apply_deltas_batched`` and the sequential
+    per-row reference (``apply_deltas_loop``) must agree BIT-EXACTLY
+    across randomized interleavings — full arrays including sentinel
+    regions, and WHICH cluster raises SpareCapacityExceeded first (tight
+    spare so the overflow path is exercised).  The public
+    ``apply_deltas`` dispatches between the two by batch density, so
+    this pins the batched path explicitly."""
+    from repro.serving.deltas import apply_deltas_batched, apply_deltas_loop
+    rng = np.random.default_rng(4242 + seed)
+    build = lambda s: astore.build_serving_index(s, K, spare_per_cluster=2)
+    store, _ = _mk_store(rng, 200)
+    idx_v = idx_l = build(store)
+    overflows = 0
+    for op in range(40):
+        batch, store = _rand_write(rng, store, int(rng.integers(1, 14)))
+        err_v = err_l = None
+        try:
+            nxt_v = apply_deltas_batched(idx_v, batch, K, CAP)
+        except SpareCapacityExceeded as e:
+            err_v = e.cluster
+        try:
+            nxt_l = apply_deltas_loop(idx_l, batch, K, CAP)
+        except SpareCapacityExceeded as e:
+            err_l = e.cluster
+        assert err_v == err_l, (
+            f"seed={seed} op={op}: vectorized raised {err_v}, "
+            f"loop raised {err_l}")
+        if err_v is not None:
+            overflows += 1
+            idx_v = idx_l = build(store)    # forced compaction, resync
+            continue
+        idx_v, idx_l = nxt_v, nxt_l
+        for name in ("item_ids", "item_bias", "item_emb", "cluster_of",
+                     "counts"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(idx_v, name)),
+                np.asarray(getattr(idx_l, name)),
+                err_msg=f"seed={seed} op={op}: {name} diverged")
+    assert overflows > 0 or seed != 0, \
+        "spare=2 parity run never overflowed — overflow parity untested"
+
+
+def test_vectorized_sharded_apply_bit_matches_loop():
+    """Same bit-parity contract for the routed sharded applier."""
+    from repro.serving.deltas import (apply_deltas_sharded_batched,
+                                      apply_deltas_sharded_loop)
+    rng = np.random.default_rng(99)
+
+    def build(s):
+        idx = astore.build_serving_index(s, K, spare_per_cluster=SPARE)
+        return shard_serving_index(idx, K, 4)
+
+    store, _ = _mk_store(rng, 200)
+    sv = sl = build(store)
+    for op in range(30):
+        batch, store = _rand_write(rng, store, int(rng.integers(1, 14)))
+        err_v = err_l = None
+        try:
+            nxt_v = apply_deltas_sharded_batched(sv, batch, K, CAP)
+        except SpareCapacityExceeded as e:
+            err_v = e.cluster
+        try:
+            nxt_l = apply_deltas_sharded_loop(sl, batch, K, CAP)
+        except SpareCapacityExceeded as e:
+            err_l = e.cluster
+        assert err_v == err_l
+        if err_v is not None:
+            sv = sl = build(store)
+            continue
+        sv, sl = nxt_v, nxt_l
+        for name in ("item_ids", "item_bias", "counts"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(sv, name)),
+                np.asarray(getattr(sl, name)),
+                err_msg=f"op={op}: {name} diverged")
+
+
 def test_tombstone_churn_past_spare_forces_compaction(rng):
     """Hammer one cluster until its spare fills: the apply must abort
     without touching the live index, and a rebuild absorbs the write."""

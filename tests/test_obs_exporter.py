@@ -1,0 +1,219 @@
+"""Exporter suite: Prometheus text exposition correctness (parsed with
+a format regex, cumulative bucket monotonicity), the JSON dump, and the
+HTTP scrape daemon under concurrent serve load (the acceptance
+criterion: a scrape returns latency / freshness / staleness /
+index-balance-entropy series as valid Prometheus text).
+"""
+import json
+import re
+import threading
+import urllib.request
+
+import pytest
+
+from _obs_svc import make_service
+from repro.obs.exporter import (CONTENT_TYPE_LATEST, dump_json,
+                                start_exporter, to_prometheus_text)
+from repro.obs.registry import MetricRegistry
+from repro.obs.trace import Tracer
+
+# text exposition format 0.0.4 line grammar (the subset we emit)
+_COMMENT_RE = re.compile(
+    r"^# (HELP|TYPE) [a-zA-Z_:][a-zA-Z0-9_:]* .*$")
+_SAMPLE_RE = re.compile(
+    r"^[a-zA-Z_:][a-zA-Z0-9_:]*"                      # metric name
+    r'(\{[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*"'    # first label
+    r'(,[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*")*\})?'
+    r" (-?\d+(\.\d+)?([eE][+-]?\d+)?|[+-]Inf|NaN)$")  # value
+
+
+def _assert_valid_exposition(text):
+    """Every line parses; every TYPE is declared before its samples;
+    histogram buckets are cumulative and end at +Inf == _count."""
+    assert text.endswith("\n")
+    types = {}
+    samples = []
+    for line in text.splitlines():
+        if line.startswith("#"):
+            assert _COMMENT_RE.match(line), line
+            kind, name, rest = line[2:].split(" ", 2)
+            if kind == "TYPE":
+                types[name] = rest
+        else:
+            assert _SAMPLE_RE.match(line), line
+            samples.append(line)
+    buckets = {}
+    for line in samples:
+        name = re.match(r"[a-zA-Z_:][a-zA-Z0-9_:]*", line).group(0)
+        base = re.sub(r"_(bucket|sum|count)$", "", name)
+        assert name in types or base in types, f"undeclared {name}"
+        if name.endswith("_bucket"):
+            le = re.search(r'le="([^"]+)"', line).group(1)
+            series = re.sub(r',?le="[^"]+"', "", line.rsplit(" ", 1)[0])
+            buckets.setdefault(series, []).append(
+                (le, float(line.rsplit(" ", 1)[1])))
+    for series, entries in buckets.items():
+        values = [v for _, v in entries]
+        assert values == sorted(values), f"{series} not cumulative"
+        assert entries[-1][0] == "+Inf", series
+    return types, samples
+
+
+# ---------------------------------------------------------------------------
+# text rendering (pure)
+# ---------------------------------------------------------------------------
+
+def test_text_format_counters_gauges_histograms():
+    reg = MetricRegistry()
+    reg.counter("req_total", help="requests served").inc(5)
+    reg.gauge("depth", help='queue "depth"\nnow').set(2.5)
+    lab = reg.counter("rows_total", labels=("shard",))
+    lab.labels(shard="0").inc(3)
+    lab.labels(shard="1").inc(4)
+    h = reg.histogram("lat_seconds", help="latency")
+    h.record(0.5e-6)                            # bucket 0 (<= lo)
+    h.record(1.0)
+    h.record(1e9)                               # unbounded last bucket
+    text = to_prometheus_text(reg)
+    types, samples = _assert_valid_exposition(text)
+    assert types == {"req_total": "counter", "depth": "gauge",
+                     "rows_total": "counter", "lat_seconds": "histogram"}
+    assert "req_total 5.0" in samples
+    assert "depth 2.5" in samples
+    assert 'rows_total{shard="0"} 3.0' in samples
+    assert "lat_seconds_count 3" in samples
+    # newline/quote escaping in HELP
+    assert '# HELP depth queue "depth"\\nnow' in text.splitlines()
+    # the +Inf bucket equals _count even with a sample past the edges
+    inf = next(s for s in samples if 'le="+Inf"' in s)
+    assert inf.endswith(" 3")
+
+
+def test_text_label_value_escaping():
+    reg = MetricRegistry()
+    c = reg.counter("esc_total", labels=("k",))
+    c.labels(k='a"b\\c\nd').inc()
+    text = to_prometheus_text(reg)
+    _assert_valid_exposition(text)
+    assert r'esc_total{k="a\"b\\c\nd"} 1.0' in text
+
+
+def test_empty_registry_renders_empty():
+    assert to_prometheus_text(MetricRegistry()) == "\n"
+
+
+def test_dump_json_writes_and_returns(tmp_path):
+    reg = MetricRegistry()
+    reg.counter("n_total").inc(2)
+    reg.histogram("lat_seconds").record(0.1)
+    path = tmp_path / "metrics.json"
+    snap = dump_json(reg, str(path))
+    on_disk = json.loads(path.read_text())
+    assert on_disk == json.loads(json.dumps(snap))
+    assert on_disk["n_total"] == 2.0
+    assert on_disk["lat_seconds"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# HTTP daemon
+# ---------------------------------------------------------------------------
+
+def _get(url, timeout=10.0):
+    with urllib.request.urlopen(url, timeout=timeout) as r:
+        return r.status, r.headers.get("Content-Type"), r.read().decode()
+
+
+def test_http_routes():
+    reg = MetricRegistry()
+    reg.counter("probe_total").inc()
+    tracer = Tracer()
+    tracer.finish(tracer.start_trace("r"))
+    with start_exporter(reg, port=0, tracer=tracer) as ex:
+        status, ctype, body = _get(ex.url("/metrics"))
+        assert status == 200 and ctype == CONTENT_TYPE_LATEST
+        _assert_valid_exposition(body)
+        assert "probe_total 1.0" in body
+        status, ctype, body = _get(ex.url("/metrics.json"))
+        assert status == 200 and ctype == "application/json"
+        assert json.loads(body)["probe_total"] == 1.0
+        status, _, body = _get(ex.url("/traces"))
+        assert status == 200
+        assert len(json.loads(body)["traceEvents"]) == 1
+        status, _, body = _get(ex.url("/healthz"))
+        assert (status, body) == (200, "ok\n")
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            _get(ex.url("/nope"))
+        assert exc.value.code == 404
+    # port released after close
+    with pytest.raises(Exception):
+        _get(ex.url("/healthz"), timeout=1.0)
+
+
+def test_traces_route_404_without_tracer():
+    with start_exporter(MetricRegistry(), port=0) as ex:
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            _get(ex.url("/traces"))
+        assert exc.value.code == 404
+
+
+def test_scrape_error_returns_500_not_wedge():
+    reg = MetricRegistry()
+    reg.register_collector(lambda: (_ for _ in ()).throw(RuntimeError("x")))
+    with start_exporter(reg, port=0) as ex:
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            _get(ex.url("/metrics"))
+        assert exc.value.code == 500
+        # the daemon survives the failing scrape
+        assert _get(ex.url("/healthz"))[0] == 200
+
+
+# ---------------------------------------------------------------------------
+# live service scrape under concurrent load (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_live_service_scrape_under_concurrent_load():
+    tracer = Tracer()
+    _, svc, batch = make_service(tracer=tracer)
+    reg = svc.register_metrics()
+    rng_err = []
+
+    def drive():
+        try:
+            for _ in range(6):
+                svc.serve_batch(batch)
+        except Exception as e:                  # pragma: no cover
+            rng_err.append(e)
+
+    threads = [threading.Thread(target=drive) for _ in range(3)]
+    with start_exporter(reg, port=0, tracer=tracer) as ex:
+        for t in threads:
+            t.start()
+        last_requests = -1.0
+        for _ in range(8):                      # scrape WHILE serving
+            status, ctype, body = _get(ex.url("/metrics"))
+            assert status == 200 and ctype == CONTENT_TYPE_LATEST
+            types, samples = _assert_valid_exposition(body)
+            # the acceptance series set
+            for needed in ("svq_serve_latency_seconds",
+                           "svq_freshness_seconds",
+                           "svq_index_cluster_entropy"):
+                assert needed in types, needed
+            assert any(s.startswith("svq_stale_serves_total ")
+                       for s in samples)
+            cur = float(next(s for s in samples if
+                             s.startswith("svq_requests_total ")
+                             ).rsplit(" ", 1)[1])
+            assert cur >= last_requests         # counters monotone
+            last_requests = cur
+        for t in threads:
+            t.join()
+        # one final scrape AFTER all serves landed: exact totals
+        _, _, body = _get(ex.url("/metrics"))
+        _, samples = _assert_valid_exposition(body)
+        final = float(next(s for s in samples if
+                           s.startswith("svq_requests_total ")
+                           ).rsplit(" ", 1)[1])
+    assert not rng_err
+    assert final == 18 * len(batch["user_id"])
+    snap = json.loads(json.dumps(dump_json(reg)))
+    assert snap["svq_batches_total"] == 18.0

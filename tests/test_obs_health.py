@@ -1,0 +1,223 @@
+"""Index-health gauge suite: every gauge checked against an independent
+numpy oracle computed directly from counts/offsets, on randomized
+indexes with spare capacity and tombstone churn; sharded per-shard
+series; the registry collector; and the service-level consistent
+freshness view (epoch / delta-log lag).
+"""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _obs_svc import make_service
+from repro.core import assignment_store as astore
+from repro.obs.index_health import (health_of, index_health,
+                                    register_index_health,
+                                    service_health, sharded_index_health)
+from repro.obs.registry import MetricRegistry
+from repro.serving import (apply_deltas, extract_deltas,
+                           shard_serving_index)
+
+K = 16
+CAP = 512
+DIM = 4
+
+
+def _random_index(rng, n_items, spare):
+    store = astore.init_store(CAP, DIM)
+    ids = rng.choice(4000, size=n_items, replace=False).astype(np.int32)
+    store = astore.write(
+        store, jnp.asarray(ids),
+        jnp.asarray(rng.integers(0, K, n_items), jnp.int32),
+        jnp.asarray(rng.normal(size=(n_items, DIM)), jnp.float32),
+        jnp.asarray(rng.normal(size=n_items), jnp.float32))
+    return astore.build_serving_index(store, K,
+                                      spare_per_cluster=spare), store
+
+
+def _oracle(counts, caps):
+    """Straight-line recomputation of every gauge from first principles
+    (independent of the library's vectorized forms)."""
+    counts = [int(c) for c in np.asarray(counts).ravel()]
+    caps = [int(c) for c in np.asarray(caps).ravel()]
+    total, cap_total = sum(counts), sum(caps)
+    probs = [c / total for c in counts if c > 0] if total else []
+    entropy = -sum(p * math.log(p) for p in probs)
+    mean = total / len(counts)
+    return dict(
+        n_clusters=float(len(counts)),
+        live_items=float(total),
+        segment_capacity=float(cap_total),
+        hole_slots=float(cap_total - total),
+        hole_ratio=(cap_total - total) / cap_total if cap_total else 0.0,
+        cluster_count_max=float(max(counts)),
+        cluster_count_mean=mean,
+        cluster_imbalance=max(counts) / mean if mean else 0.0,
+        cluster_entropy=entropy,
+        cluster_entropy_ratio=entropy / math.log(len(counts)),
+        empty_clusters=float(sum(c == 0 for c in counts)),
+    )
+
+
+@pytest.mark.parametrize("seed,spare", [(0, 0), (1, 8), (2, 8), (3, 16)])
+def test_index_health_matches_numpy_oracle(seed, spare):
+    rng = np.random.default_rng(seed)
+    idx, _ = _random_index(rng, int(rng.integers(50, 400)), spare)
+    got = index_health(idx)
+    offs = np.asarray(idx.offsets)
+    want = _oracle(idx.counts, offs[1:] - offs[:-1])
+    assert set(got) == set(want)
+    for k, v in want.items():
+        assert got[k] == pytest.approx(v, rel=1e-12), k
+    # spare slots show up as holes, exactly spare * K minus occupancy
+    if spare:
+        assert got["hole_slots"] >= 0.0
+        assert got["segment_capacity"] == got["live_items"] \
+            + got["hole_slots"]
+
+
+def test_health_tracks_tombstone_churn(rng):
+    """After delta applies the gauges follow the LIVE counts: a
+    reassignment moves an item between clusters without changing the
+    total; holes absorb the move."""
+    idx, store = _random_index(rng, 200, spare=8)
+    before = index_health(idx)
+    net = 0
+    for i in range(5):
+        ids = np.array([5000 + i], np.int32)     # fresh id: one append,
+        new_store = astore.write(                # maybe one hash evict
+            store, jnp.asarray(ids),
+            jnp.asarray([int(rng.integers(0, K))], jnp.int32),
+            jnp.asarray(rng.normal(size=(1, DIM)), jnp.float32),
+            jnp.asarray([0.5], jnp.float32))
+        batch = extract_deltas(store, new_store, jnp.asarray(ids))
+        idx = apply_deltas(idx, batch, K, CAP)
+        store = new_store
+        net += int((np.asarray(batch.new_id) >= 0).sum())
+        net -= int((np.asarray(batch.old_id) >= 0).sum())
+    after = index_health(idx)
+    assert after["live_items"] == before["live_items"] + net
+    assert after["segment_capacity"] == before["segment_capacity"]
+    assert after["hole_slots"] == before["hole_slots"] - net
+    # oracle still holds on the churned index
+    offs = np.asarray(idx.offsets)
+    want = _oracle(idx.counts, offs[1:] - offs[:-1])
+    got = index_health(idx)
+    for k, v in want.items():
+        assert got[k] == pytest.approx(v, rel=1e-12), k
+
+
+def test_entropy_extremes():
+    """Uniform counts -> ratio 1.0; single mega-cluster -> entropy 0
+    (the §3.2 balance claim's two endpoints)."""
+    class Fake:
+        pass
+    uniform = Fake()
+    uniform.offsets = np.arange(0, (K + 1) * 10, 10)
+    uniform.counts = np.full(K, 7)
+    h = index_health(uniform)
+    assert h["cluster_entropy_ratio"] == pytest.approx(1.0)
+    assert h["cluster_imbalance"] == pytest.approx(1.0)
+    assert h["empty_clusters"] == 0.0
+    mega = Fake()
+    mega.offsets = np.arange(0, (K + 1) * 10, 10)
+    mega.counts = np.array([70] + [0] * (K - 1))
+    h = index_health(mega)
+    assert h["cluster_entropy"] == 0.0
+    assert h["cluster_imbalance"] == pytest.approx(K)
+    assert h["empty_clusters"] == float(K - 1)
+
+
+def test_empty_index_health_is_defined():
+    class Fake:
+        offsets = np.zeros(K + 1, np.int64)
+        counts = np.zeros(K, np.int64)
+    h = index_health(Fake())
+    assert h["live_items"] == 0.0
+    assert h["hole_ratio"] == 0.0
+    assert h["cluster_entropy"] == 0.0
+    assert h["cluster_imbalance"] == 0.0
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_sharded_health_per_shard_oracle(rng, n_shards):
+    idx, _ = _random_index(rng, 300, spare=4)
+    sidx = shard_serving_index(idx, K, n_shards)
+    got = sharded_index_health(sidx)
+    counts = np.asarray(sidx.counts)
+    offs = np.asarray(sidx.offsets)
+    want = _oracle(counts, offs[:, 1:] - offs[:, :-1])
+    for k, v in want.items():
+        assert got[k] == pytest.approx(v, rel=1e-12), k
+    # per-shard live items: row sums, order-preserving
+    shard_items = counts.sum(axis=1)
+    assert got["shard_items"] == [float(x) for x in shard_items]
+    assert got["n_shards"] == float(n_shards)
+    assert got["shard_imbalance"] == pytest.approx(
+        shard_items.max() / shard_items.mean())
+    # sharding never changes the aggregate gauges
+    assert got["live_items"] == index_health(idx)["live_items"]
+    assert got["cluster_entropy"] == pytest.approx(
+        index_health(idx)["cluster_entropy"], rel=1e-12)
+
+
+def test_health_of_dispatches_on_layout(rng):
+    idx, _ = _random_index(rng, 100, spare=0)
+    assert "n_shards" not in health_of(idx)
+    assert health_of(shard_serving_index(idx, K, 2))["n_shards"] == 2.0
+
+
+def test_register_index_health_collector(rng):
+    idx, _ = _random_index(rng, 150, spare=4)
+    sidx = shard_serving_index(idx, K, 2)
+    reg = MetricRegistry()
+    register_index_health(reg, lambda: health_of(sidx), namespace="idx")
+    snap = reg.snapshot()
+    assert snap["idx_live_items"]["value"] == \
+        float(np.asarray(sidx.counts).sum())
+    assert snap["idx_cluster_entropy"]["type"] == "gauge"
+    # shard_items exports as a LABELED family, one series per shard
+    counts = np.asarray(sidx.counts).sum(axis=1)
+    assert snap['idx_shard_items{shard="0"}']["value"] == float(counts[0])
+    assert snap['idx_shard_items{shard="1"}']["value"] == float(counts[1])
+
+
+# ---------------------------------------------------------------------------
+# service-level consistent snapshot
+# ---------------------------------------------------------------------------
+
+def test_service_health_snapshot_freshness_view(rng):
+    cfg, svc, _ = make_service()
+    h = service_health(svc)
+    for key in ("index_epoch", "index_age_s", "delta_version",
+                "delta_log_lag", "cluster_entropy", "live_items",
+                "hole_ratio"):
+        assert key in h, key
+    assert h["index_age_s"] >= 0.0
+    assert h["delta_log_lag"] == 0.0
+    # an IMMEDIATE apply advances the published delta version: no lag
+    prev = svc.store_snapshot()
+    ids = np.array([7], np.int32)
+    new_store = astore.write(
+        prev, jnp.asarray(ids), jnp.asarray([2], jnp.int32),
+        jnp.asarray(rng.normal(size=(1, cfg.embed_dim)), jnp.float32),
+        jnp.asarray([0.1], jnp.float32))
+    svc.apply_deltas(extract_deltas(prev, new_store, jnp.asarray(ids)))
+    assert svc.health_snapshot()["delta_log_lag"] == 0.0
+    # a DEFERRED apply leaves the published index one log entry behind
+    prev = svc.store_snapshot()
+    ids = np.array([9], np.int32)
+    new_store = astore.write(
+        prev, jnp.asarray(ids), jnp.asarray([3], jnp.int32),
+        jnp.asarray(rng.normal(size=(1, cfg.embed_dim)), jnp.float32),
+        jnp.asarray([0.2], jnp.float32))
+    svc.apply_deltas(extract_deltas(prev, new_store, jnp.asarray(ids)),
+                     immediate=False)
+    h = svc.health_snapshot()
+    assert h["delta_log_lag"] == 1.0
+    epoch_before = h["index_epoch"]
+    svc.rebuild_index()                         # rebuild folds the log
+    h = svc.health_snapshot()
+    assert h["delta_log_lag"] == 0.0
+    assert h["index_epoch"] == epoch_before + 1

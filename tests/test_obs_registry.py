@@ -1,0 +1,323 @@
+"""Registry + histogram suite: instruments, labels, snapshot/diff rate
+views, the ServeStats adapter, and property tests for the histogram's
+``merge``/``diff`` (satellite: the empty-snapshot ``min`` normalization
+and the interval-histogram algebra).
+"""
+import json
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from _hypo import given, settings, st
+from repro.obs.histogram import HistogramSnapshot, LatencyHistogram
+from repro.obs.registry import (MetricRegistry, register_serve_stats,
+                                to_jsonable)
+from repro.serving.telemetry import ServeStats
+
+
+# ---------------------------------------------------------------------------
+# histogram: empty-snapshot edge + lock exactness
+# ---------------------------------------------------------------------------
+
+def test_empty_snapshot_min_is_none_and_json_safe():
+    h = LatencyHistogram()
+    s = h.snapshot()
+    assert s.min is None and s.max == 0.0 and s.count == 0
+    assert s.percentile(0.99) == 0.0 and s.mean == 0.0
+    # the raw object still carries inf internally; the SNAPSHOT is the
+    # serialization surface and must survive a strict JSON round trip
+    assert h.min == math.inf
+    text = json.dumps(s.to_dict())
+    assert json.loads(text)["min_ms"] == 0.0
+
+
+def test_first_sample_resolves_min():
+    h = LatencyHistogram()
+    h.record(0.25)
+    s = h.snapshot()
+    assert s.min == 0.25 and s.max == 0.25 and s.count == 1
+
+
+def test_histogram_concurrent_records_exact():
+    h = LatencyHistogram()
+    n_threads, per_thread = 8, 500
+    barrier = threading.Barrier(n_threads)
+
+    def work(i):
+        barrier.wait()
+        for k in range(per_thread):
+            h.record(1e-4 * (1 + (i * per_thread + k) % 7))
+
+    threads = [threading.Thread(target=work, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert h.snapshot().count == n_threads * per_thread   # EXACT
+
+
+# ---------------------------------------------------------------------------
+# histogram: merge()/diff() properties (hypothesis via the _hypo shim)
+# ---------------------------------------------------------------------------
+
+def _samples(rng, n):
+    return rng.lognormal(mean=-7.0, sigma=2.5, size=n)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 10_000), st.integers(0, 300), st.integers(0, 300))
+def test_merge_equals_recording_the_union(seed, n_a, n_b):
+    rng = np.random.default_rng(seed)
+    xs, ys = _samples(rng, n_a), _samples(rng, n_b)
+    a, b, union = LatencyHistogram(), LatencyHistogram(), LatencyHistogram()
+    for x in xs:
+        a.record(x)
+        union.record(x)
+    for y in ys:
+        b.record(y)
+        union.record(y)
+    a.merge(b)
+    sa, su = a.snapshot(), union.snapshot()
+    assert sa.counts == su.counts
+    assert sa.count == su.count
+    assert sa.min == su.min and sa.max == su.max   # true extrema merge
+    assert math.isclose(sa.sum, su.sum, rel_tol=1e-9, abs_tol=1e-12)
+    assert sa.percentile(0.99) == su.percentile(0.99)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 10_000), st.integers(0, 300), st.integers(0, 300))
+def test_diff_is_the_interval_histogram(seed, n_before, n_after):
+    rng = np.random.default_rng(seed)
+    before, after = _samples(rng, n_before), _samples(rng, n_after)
+    h, interval_only = LatencyHistogram(), LatencyHistogram()
+    for x in before:
+        h.record(x)
+    prev = h.snapshot()
+    for y in after:
+        h.record(y)
+        interval_only.record(y)
+    d = h.diff(prev)
+    ref = interval_only.snapshot()
+    # bucket counts / count / sum are EXACT interval values
+    assert d.counts == ref.counts
+    assert d.count == ref.count == n_after
+    assert math.isclose(d.sum, ref.sum, rel_tol=1e-9, abs_tol=1e-12)
+    if n_after == 0:
+        assert d.min is None and d.max == 0.0
+    else:
+        # min/max are bucket-edge bounds around the true interval extrema
+        assert d.min <= ref.min
+        assert d.max >= ref.max or math.isclose(d.max, ref.max)
+        assert d.percentile(0.99) == ref.percentile(0.99)
+
+
+def test_diff_against_none_is_snapshot():
+    h = LatencyHistogram()
+    h.record(0.01, n=3)
+    assert h.diff(None) == h.snapshot()
+
+
+def test_merge_and_diff_reject_mismatched_layouts():
+    a, b = LatencyHistogram(), LatencyHistogram(n_buckets=8)
+    with pytest.raises(ValueError):
+        a.merge(b)
+    with pytest.raises(ValueError):
+        a.merge(a)
+    with pytest.raises(ValueError):
+        a.diff(b.snapshot())
+    # a snapshot that is not a prefix (histogram regressed / reset)
+    a.record(1.0)
+    bigger = a.snapshot()
+    fresh = LatencyHistogram()
+    with pytest.raises(ValueError):
+        fresh.diff(bigger)
+
+
+def test_concurrent_cross_merge_no_deadlock():
+    """a.merge(b) racing b.merge(a): the id-ordered lock acquisition
+    must not ABBA-deadlock (the join would hang forever if it did)."""
+    a, b = LatencyHistogram(), LatencyHistogram()
+    a.record(0.1)
+    b.record(0.2)
+    threads = [threading.Thread(target=a.merge, args=(b,)),
+               threading.Thread(target=b.merge, args=(a,))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=10.0)
+        assert not t.is_alive()
+
+
+# ---------------------------------------------------------------------------
+# registry: instruments, labels, uniqueness
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_basics():
+    reg = MetricRegistry()
+    c = reg.counter("reqs_total", help="requests")
+    g = reg.gauge("queue_depth")
+    c.inc()
+    c.inc(2.5)
+    g.set(7)
+    g.inc(-2)
+    snap = reg.snapshot()
+    assert snap["reqs_total"] == {"type": "counter", "value": 3.5}
+    assert snap["queue_depth"] == {"type": "gauge", "value": 5.0}
+    with pytest.raises(ValueError):
+        c.default.inc(-1)                       # counters only go up
+
+
+def test_labels_created_on_demand_and_validated():
+    reg = MetricRegistry()
+    c = reg.counter("rows_total", labels=("shard",))
+    c.labels(shard="0").inc(5)
+    c.labels(shard="1").inc(7)
+    c.labels(shard="0").inc(1)                  # same child again
+    snap = reg.snapshot()
+    assert snap['rows_total{shard="0"}']["value"] == 6.0
+    assert snap['rows_total{shard="1"}']["value"] == 7.0
+    with pytest.raises(ValueError):
+        c.labels(host="x")                      # wrong label set
+    with pytest.raises(ValueError):
+        c.inc()                                 # no unlabeled default
+    with pytest.raises(ValueError):
+        reg.gauge("bad_labels", labels=("not-ok",))
+
+
+def test_name_uniqueness_and_validation():
+    reg = MetricRegistry()
+    first = reg.counter("x_total")
+    with pytest.raises(ValueError):
+        reg.counter("x_total")
+    with pytest.raises(ValueError):
+        reg.gauge("x_total")                    # across kinds too
+    assert reg.counter("x_total", exist_ok=True) is first
+    with pytest.raises(ValueError):
+        reg.counter("0bad")
+    with pytest.raises(ValueError):
+        reg.counter("has space")
+    assert reg.unregister("x_total")
+    assert not reg.unregister("x_total")
+    reg.counter("x_total")                      # reusable after removal
+
+
+def test_callback_instruments_read_live_values():
+    reg = MetricRegistry()
+    box = {"n": 0.0}
+    reg.counter_fn("cb_total", lambda: box["n"])
+    reg.gauge_fn("cb_gauge", lambda: box["n"] * 2)
+    box["n"] = 4.0
+    snap = reg.snapshot()
+    assert snap["cb_total"]["value"] == 4.0
+    assert snap["cb_gauge"]["value"] == 8.0
+
+
+def test_histogram_adoption_and_labels():
+    reg = MetricRegistry()
+    mine = LatencyHistogram()
+    mine.record(0.5, n=10)
+    reg.histogram("adopted_seconds", hist=mine)
+    lab = reg.histogram("staged_seconds", labels=("stage",))
+    lab.labels(stage="rank").record(0.1)
+    snap = reg.snapshot()
+    assert snap["adopted_seconds"]["value"].count == 10
+    assert snap['staged_seconds{stage="rank"}']["value"].count == 1
+    mine.record(0.5)                            # adoption is by reference
+    assert reg.snapshot()["adopted_seconds"]["value"].count == 11
+    with pytest.raises(ValueError):
+        reg.histogram("h2", hist=mine, labels=("x",))
+
+
+def test_snapshot_diff_gives_rates():
+    reg = MetricRegistry()
+    c = reg.counter("n_total")
+    g = reg.gauge("depth")
+    h = reg.histogram("lat_seconds")
+    c.inc(10)
+    g.set(3)
+    h.record(0.1, n=4)
+    prev = reg.snapshot()
+    c.inc(5)
+    g.set(9)
+    h.record(0.2, n=2)
+    d = reg.diff(prev)
+    assert d["n_total"]["value"] == 5.0         # counter delta
+    assert d["depth"]["value"] == 9.0           # gauge: current
+    assert d["lat_seconds"]["value"].count == 2  # interval histogram
+    # a series born after ``prev`` diffs against zero
+    reg.counter("late_total").inc(2)
+    assert reg.diff(prev)["late_total"]["value"] == 2.0
+
+
+def test_collector_families_and_jsonable():
+    reg = MetricRegistry()
+    from repro.obs.registry import Family
+    reg.register_collector(lambda: [
+        Family("dyn_gauge", "gauge", "", [({}, 1.5)]),
+        Family("dyn_labeled", "gauge", "",
+               [({"shard": "0"}, 2.0), ({"shard": "1"}, 3.0)])])
+    reg.histogram("h_seconds").record(0.01)
+    snap = reg.snapshot_jsonable()
+    json.dumps(snap)                            # fully JSON-safe
+    assert snap["dyn_gauge"] == 1.5
+    assert snap['dyn_labeled{shard="1"}'] == 3.0
+    assert snap["h_seconds"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# the ServeStats adapter
+# ---------------------------------------------------------------------------
+
+def test_register_serve_stats_exports_everything():
+    reg = MetricRegistry()
+    stats = ServeStats()
+    register_serve_stats(reg, stats, namespace="svq")
+    stats.n_requests = 12
+    stats.delta_tombstones = 3
+    stats.generation = 5
+    stats.latency.record(0.01, n=2)
+    stats.freshness.record(1.5)
+    snap = reg.snapshot()
+    assert snap["svq_requests_total"]["value"] == 12.0
+    assert snap["svq_delta_tombstones_total"]["value"] == 3.0
+    assert snap["svq_index_generation"]["value"] == 5.0
+    assert snap["svq_serve_latency_seconds"]["value"].count == 2
+    assert snap["svq_freshness_seconds"]["value"].count == 1
+    # stages registered AFTER the adapter still export (collector
+    # re-resolves from the stats object at scrape time)
+    stats.stage("merge").record(0.004)
+    key = 'svq_stage_latency_seconds{stage="merge"}'
+    assert reg.snapshot()[key]["value"].count == 1
+    # reset_timings replaces histogram objects; scrape must follow
+    stats.reset_timings()
+    assert reg.snapshot()["svq_serve_latency_seconds"]["value"].count == 0
+
+
+def test_register_serve_stats_namespace_guard():
+    reg = MetricRegistry()
+    stats = ServeStats()
+    register_serve_stats(reg, stats, namespace="svq")
+    with pytest.raises(ValueError):
+        register_serve_stats(reg, ServeStats(), namespace="svq")
+    # exist_ok: silent no-op, and no duplicated histogram collector
+    register_serve_stats(reg, ServeStats(), namespace="svq",
+                         exist_ok=True)
+    fams = [f.name for f in reg.collect()]
+    assert fams.count("svq_serve_latency_seconds") == 1
+    # distinct namespace coexists
+    register_serve_stats(reg, ServeStats(), namespace="train")
+    assert "train_requests_total" in reg.snapshot()
+
+
+def test_to_jsonable_normalizes_histogram_snapshots():
+    h = LatencyHistogram()
+    h.record(0.123)
+    snap = {"lat": {"type": "histogram", "value": h.snapshot()},
+            "n": {"type": "counter", "value": 3.0}}
+    out = to_jsonable(snap)
+    json.dumps(out)
+    assert out["n"] == 3.0 and out["lat"]["count"] == 1
