@@ -54,18 +54,19 @@ def run() -> list:
 def _dr_concentration(tr) -> list:
     import jax
     import jax.numpy as jnp
-    from benchmarks.common import item_embeddings, user_embeddings
+    from benchmarks.common import item_embeddings, sz, user_embeddings
     from repro.baselines import DRConfig, DRIndex, init_dr, train_dr_step
 
     cfg = DRConfig(depth=3, k_nodes=32, dim=tr.cfg.embed_dim, beam=16)
     params = init_dr(jax.random.PRNGKey(0), cfg)
     dri = DRIndex(cfg, tr.cfg.n_items)
     rng = np.random.default_rng(0)
-    users = rng.integers(0, tr.cfg.n_users, 2048)
+    n_u = sz(2048, 256)
+    users = rng.integers(0, tr.cfg.n_users, n_u)
     u = user_embeddings(tr, users)
     # E-steps on (user, positive-item-path) pairs + one M-step
-    item_of = rng.integers(0, tr.cfg.n_items, 2048)
-    for i in range(0, 2048, 256):
+    item_of = rng.integers(0, tr.cfg.n_items, n_u)
+    for i in range(0, n_u, 256):
         paths = jnp.asarray(dri.item_paths[item_of[i:i + 256], 0])
         params, _ = train_dr_step(params, cfg, jnp.asarray(u[i:i + 256]),
                                   paths)

@@ -12,18 +12,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_cfg, make_stream
+from benchmarks.common import bench_cfg, make_stream, sz
 from repro.baselines import recall_at_k
 from repro.core import assignment_store as astore
 from repro.core import retriever as R
 from repro.launch.train import eval_svq_recall, train_svq
 
-K = 100
-STEPS = 150
-DRIFT_STEPS = 150
+K = sz(100, 20)
+STEPS = sz(150, 12)
+BATCH = sz(256, 64)
 
 
-def _continue_training(cfg, stream, params, index, n_steps, batch=256):
+def _continue_training(cfg, stream, params, index, n_steps, batch=BATCH):
     from repro.optim import adagrad, adamw, clip_by_global_norm, \
         multi_optimizer
     route = lambda p: ("adagrad" if "tables" in jax.tree_util.keystr(p)
@@ -49,7 +49,7 @@ def _continue_training(cfg, stream, params, index, n_steps, batch=256):
     return params, index
 
 
-CURVE = (25, 25, 50, 50)      # post-drift training segments
+CURVE = sz((25, 25, 50, 50), (4, 8))      # post-drift training segments
 
 
 def run() -> list:
@@ -57,9 +57,9 @@ def run() -> list:
     for variant, use_l_sim in (("l_aux", False), ("l_sim", True)):
         cfg = bench_cfg(use_l_sim=use_l_sim)
         stream = make_stream(cfg)
-        params, index, _ = train_svq(cfg, stream, STEPS, 256, seed=11)
-        pre = eval_svq_recall(cfg, params, index, stream, n_users=48,
-                              k=K)["recall"]
+        params, index, _ = train_svq(cfg, stream, STEPS, BATCH, seed=11)
+        pre = eval_svq_recall(cfg, params, index, stream,
+                              n_users=sz(48, 16), k=K)["recall"]
         before_assign = np.asarray(index.store.cluster).copy()
         # drift: invert/permute topic centers (hard semantic shift)
         stream.topic_centers = -stream.topic_centers[::-1]
@@ -70,8 +70,8 @@ def run() -> list:
             params, index = _continue_training(cfg, stream, params,
                                                index, seg)
             done += seg
-            r = eval_svq_recall(cfg, params, index, stream, n_users=48,
-                                k=K)["recall"]
+            r = eval_svq_recall(cfg, params, index, stream,
+                                n_users=sz(48, 16), k=K)["recall"]
             rows.append((f"drift/{variant}_recall_post{done:03d}", None,
                          round(r, 4)))
         after_assign = np.asarray(index.store.cluster)

@@ -29,21 +29,19 @@ Results land in ``BENCH_freshness.json``:
 from __future__ import annotations
 
 import json
-import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import trained_retriever
+from benchmarks.common import out_json, sz, trained_retriever
 from repro.core import assignment_store as astore
 from repro.core.freq_estimator import hash_ids
 from repro.serving import RetrievalService, extract_deltas
 
-OUT_JSON = os.path.join(os.path.dirname(__file__), "..",
-                        "BENCH_freshness.json")
-N_WRITES = 40                  # delta batches per phase
+OUT_JSON = out_json("BENCH_freshness.json")
+N_WRITES = sz(40, 8)           # delta batches per phase
 WRITE_EVERY_S = 0.01
 BATCH_ITEMS = 4
 REBUILD_INTERVAL_S = 0.3       # baseline publication cadence

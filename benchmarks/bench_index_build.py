@@ -15,8 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (item_embeddings, timed, trained_retriever,
-                               user_embeddings)
+from benchmarks.common import (item_embeddings, sz, timed,
+                               trained_retriever, user_embeddings)
 from repro.baselines import DRConfig, DRIndex, build_hnsw, init_dr
 from repro.core import vq
 
@@ -24,7 +24,7 @@ from repro.core import vq
 def run() -> list:
     tr = trained_retriever()
     item_emb, item_bias = item_embeddings(tr)
-    n = 2000                              # HNSW python build budget
+    n = sz(2000, 300)                     # HNSW python build budget
     rows = []
 
     t0 = time.perf_counter()
@@ -48,9 +48,10 @@ def run() -> list:
     # streaming VQ: assignment is Eq. 10 inside the jitted train step
     assign = jax.jit(lambda v: vq.assign(tr.index.vq, v,
                                          tr.cfg.disturbance_s))
-    batch = jnp.asarray(item_emb[:4096], jnp.float32)
+    nb = sz(4096, 256)
+    batch = jnp.asarray(item_emb[:nb], jnp.float32)
     us, _ = timed(assign, batch, n=10)
-    rows.append(("index_build/svq_assign_us_per_item", us / 4096,
+    rows.append(("index_build/svq_assign_us_per_item", us / nb,
                  "real-time, inside the train step; rebuild time = 0"))
     rows.append(("index_build/svq_rebuild_s", 0.0,
                  "no offline stage exists (index immediacy, §3.1)"))
@@ -60,7 +61,7 @@ def run() -> list:
     # (kernels/ops.index_sort dispatch in astore.build_serving_index)
     from repro.core import assignment_store as astore
     rng = np.random.default_rng(9)
-    n, k = 262_144, 4096
+    n, k = sz(262_144, 8_192), sz(4096, 256)
     store = astore.init_store(n, 8)
     n_wr = n // 2                          # half-occupied PS, like prod
     store = astore.write(

@@ -3,7 +3,10 @@
 Wall-time of the Pallas kernels is NOT meaningful on CPU (interpret mode
 runs the kernel body in Python); this bench times the jnp reference path
 (what the dry-run lowers) and re-validates kernels against it at bench
-shapes.  Real-TPU kernel timing hooks the same functions.
+shapes — including the PR-8 surfaces: the ``ema_segment_sum`` scatter-add
+and the flash-style ``inbatch_softmax_bwd`` (checked against the autodiff
+VJP of the dense reference).  Real-TPU kernel timing hooks the same
+functions.
 """
 from __future__ import annotations
 
@@ -11,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import timed
+from benchmarks.common import sz, timed
 from repro.kernels import ops, ref
 
 
@@ -19,7 +22,7 @@ def run() -> list:
     rng = np.random.default_rng(4)
     rows = []
 
-    b, k, d = 4096, 16384, 64            # paper-scale assignment batch
+    b, k, d = sz(4096, 256), sz(16384, 512), sz(64, 16)
     v = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
     e = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
     r = jnp.ones((k,), jnp.float32)
@@ -30,16 +33,16 @@ def run() -> list:
     ok = bool(jnp.all(a_pal == ref.vq_assign_ref(v[:128], e, r)))
     rows.append(("kernels/vq_assign_pallas_match", None, ok))
 
-    n = 1_000_000
+    n = sz(1_000_000, 20_000)
     items = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
     bias = jnp.zeros((n,), jnp.float32)
     u = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
     us, _ = timed(jax.jit(lambda *a: ref.topk_dot_ref(*a, 512)),
                   u, items, bias, n=3)
-    rows.append(("kernels/topk_dot_1M_ref_us", round(us, 1),
+    rows.append((f"kernels/topk_dot_{n}_ref_us", round(us, 1),
                  "retrieval_cand hot path"))
 
-    bsz = 8192
+    bsz = sz(8192, 256)
     uu = jnp.asarray(rng.normal(size=(bsz, d)).astype(np.float32))
     vv = jnp.asarray(rng.normal(size=(bsz, d)).astype(np.float32))
     bb = jnp.zeros((bsz,), jnp.float32)
@@ -47,11 +50,43 @@ def run() -> list:
     rows.append(("kernels/inbatch_softmax_ref_us", round(us, 1),
                  f"B={bsz} (L_aux hot path)"))
 
+    # flash-style backward vs the autodiff VJP of the dense reference
+    # (the (B, B)-materializing path the kernel replaces)
+    bs = 96                                   # validation slice
+    lq = jnp.asarray(rng.normal(size=(bs,)).astype(np.float32))
+    bbq = jnp.asarray(rng.normal(size=(bs,)).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=(bs,)).astype(np.float32))
+    _, vjp = jax.vjp(
+        lambda a, c, bb_, q: ref.inbatch_softmax_ref(a, c, bb_, q),
+        uu[:bs], vv[:bs], bbq, lq)
+    du_r, dv_r, db_r, dq_r = vjp(g)
+    _, m, lsum = ops.inbatch_softmax_stats(uu[:bs], vv[:bs], bbq, lq)
+    du_k, dv_k, db_k, dq_k = ops.inbatch_softmax_bwd(
+        uu[:bs], vv[:bs], bbq, lq, m + jnp.log(lsum), g)
+    ok = all(bool(jnp.allclose(a, b_, rtol=1e-4, atol=1e-5))
+             for a, b_ in ((du_r, du_k), (dv_r, dv_k),
+                           (db_r, db_k), (dq_r, dq_k)))
+    rows.append(("kernels/inbatch_softmax_bwd_match", None, ok))
+
+    # streaming-VQ EMA batch reductions (Eq. 7-8 train-step surface)
+    ka = sz(512, 64)
+    asg = jnp.asarray(rng.integers(0, ka + 1, b).astype(np.int32))
+    wt = jnp.asarray(rng.random(b).astype(np.float32))
+    us, _ = timed(jax.jit(lambda *a: ref.ema_segment_sum_ref(*a, ka)),
+                  v, asg, wt, n=3)
+    rows.append(("kernels/ema_segment_sum_ref_us", round(us, 1),
+                 f"B={b} K={ka} (padding row K ignored)"))
+    w_k, c_k = ops.ema_segment_sum(v[:128], asg[:128], wt[:128], ka)
+    w_r, c_r = ref.ema_segment_sum_ref(v[:128], asg[:128], wt[:128], ka)
+    ok = bool(jnp.allclose(w_k, w_r, rtol=1e-5, atol=1e-5)
+              & jnp.allclose(c_k, c_r, rtol=1e-5, atol=1e-5))
+    rows.append(("kernels/ema_segment_sum_pallas_match", None, ok))
+
     # serving indexing step: blocked cluster ranking (Eq. 5/11)
-    bq, k = 256, 16384
+    bq = sz(256, 32)
     uq = jnp.asarray(rng.normal(size=(bq, d)).astype(np.float32))
     ek = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
-    us, _ = timed(jax.jit(lambda a, b: ref.cluster_rank_ref(a, b, 128)),
+    us, _ = timed(jax.jit(lambda a, b_: ref.cluster_rank_ref(a, b_, 128)),
                   uq, ek, n=3)
     rows.append(("kernels/cluster_rank_ref_us", round(us, 1),
                  f"B={bq} K={k} top128"))
@@ -61,24 +96,28 @@ def run() -> list:
     rows.append(("kernels/cluster_rank_pallas_match", None, ok))
 
     # serving merge step: Alg. 1 fused kernel vs vmapped lax.scan ref
-    bm, c, l, tgt = 4, 64, 128, 256
+    bm, c, l, tgt = sz(4, 2), sz(64, 16), sz(128, 32), sz(256, 48)
     mcs = jnp.asarray(rng.normal(size=(bm, c)).astype(np.float32))
     mbl = jnp.asarray(-np.sort(
         -rng.normal(size=(bm, c, l)).astype(np.float32), axis=-1))
     mln = jnp.asarray(rng.integers(0, l + 1, (bm, c)).astype(np.int32))
     us, (pos_r, sc_r) = timed(
-        jax.jit(lambda a, b, cc: ref.merge_serve_ref(a, b, cc, 8, tgt)),
+        jax.jit(lambda a, b_, cc: ref.merge_serve_ref(a, b_, cc, 8, tgt)),
         mcs, mbl, mln, n=3)
     rows.append(("kernels/merge_serve_ref_us", round(us, 1),
                  f"B={bm} C={c} L={l} S={tgt} (lax.scan fallback)"))
     pos_p, sc_p = ops.merge_serve(mcs, mbl, mln, 8, tgt)
     ok = bool(jnp.all(pos_p == pos_r) & jnp.all(sc_p == sc_r))
     rows.append(("kernels/merge_serve_pallas_match", None, ok))
+    pos_d, sc_d = ops.merge_serve_ds(mcs, mbl, mln, 8, tgt)
+    ok = bool(jnp.all(pos_d == pos_r) & jnp.all(sc_d == sc_r))
+    rows.append(("kernels/merge_serve_ds_pallas_match", None, ok))
 
-    table = jnp.asarray(rng.normal(size=(100_000, 64)).astype(np.float32))
-    ids = jnp.asarray(rng.integers(0, 100_000, (4096, 20))
+    nt = sz(100_000, 5_000)
+    table = jnp.asarray(rng.normal(size=(nt, 64)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, nt, (sz(4096, 256), 20))
                       .astype(np.int32))
     us, _ = timed(jax.jit(ref.embedding_bag_ref), table, ids, n=3)
     rows.append(("kernels/embedding_bag_ref_us", round(us, 1),
-                 "B=4096 bag=20 (DLRM hot path)"))
+                 f"B={ids.shape[0]} bag=20 (DLRM hot path)"))
     return rows

@@ -42,7 +42,6 @@ Results land in ``BENCH_observability.json``:
 from __future__ import annotations
 
 import json
-import os
 import time
 import urllib.request
 
@@ -50,20 +49,19 @@ import jax.numpy as jnp
 import numpy as np
 
 import jax
-from benchmarks.common import trained_retriever
+from benchmarks.common import out_json, sz, trained_retriever
 from repro.core import assignment_store as astore
 from repro.obs import Tracer, start_exporter
 from repro.serving import RetrievalService, extract_deltas
 from repro.serving.deltas import apply_deltas_batched, apply_deltas_loop
 
-OUT_JSON = os.path.join(os.path.dirname(__file__), "..",
-                        "BENCH_observability.json")
-ROUNDS = 10                     # interleaved rounds per phase
-CALLS_PER_ROUND = 40
+OUT_JSON = out_json("BENCH_observability.json")
+ROUNDS = sz(10, 2)              # interleaved rounds per phase
+CALLS_PER_ROUND = sz(40, 8)
 SAMPLE_EVERY = 256              # production-style trace sampling
 BATCH_ROWS = 32
-DELTA_BATCHES = 50
-DELTA_ROWS = 1024               # one train step's writes (= batch size)
+DELTA_BATCHES = sz(50, 6)
+DELTA_ROWS = sz(1024, 128)      # one train step's writes (= batch size)
 
 
 def _serve_loop(svc, batch, n, out):
@@ -106,7 +104,7 @@ def _bench_serve(tr, batch):
     lat_on = [x for r in rounds_on for x in r]
     # honest per-traced-request cost: fused vs staged, same service
     fused, staged = [], []
-    for _ in range(20):
+    for _ in range(sz(20, 5)):
         t0 = time.perf_counter()
         svc_on.serve_batch(batch, span_sink=None)
         fused.append(time.perf_counter() - t0)

@@ -19,16 +19,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (item_embeddings, timed, trained_retriever,
-                               user_embeddings)
+from benchmarks.common import (item_embeddings, sz, timed,
+                               trained_retriever, user_embeddings)
 from repro.baselines import (DRConfig, DRIndex, build_hnsw, init_dr,
                              mips_topk, recall_at_k, train_dr_step)
 from repro.core import assignment_store as astore
 from repro.core import retriever as R
 
-K = 100
-N_QUERY = 64
-HNSW_ITEMS = 2000        # python HNSW budget
+K = sz(100, 20)
+N_QUERY = sz(64, 8)
+HNSW_ITEMS = sz(2000, 300)        # python HNSW budget
 
 
 def _vq_retrieve(tr, users, k, items_per_cluster=64) -> np.ndarray:
@@ -105,8 +105,8 @@ def _dr_recall(tr, users, truth, item_emb):
     dri = DRIndex(cfg, tr.cfg.n_items)
     rng = np.random.default_rng(2)
     # brief E/M training against positives from the stream ground truth
-    for it in range(8):
-        us_ = rng.integers(0, tr.cfg.n_users, 512)
+    for it in range(sz(8, 4)):
+        us_ = rng.integers(0, tr.cfg.n_users, sz(512, 64))
         ue = user_embeddings(tr, us_)
         pos = tr.stream.true_topk(us_, 1)[:, 0]
         paths = jnp.asarray(dri.item_paths[pos, 0])

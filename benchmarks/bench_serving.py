@@ -13,29 +13,30 @@ Compares three front doors over the SAME trained retriever:
            recorded p99 INCLUDES queue wait (what a client sees)
 
 plus the double-buffer: rebuilds run in the background during the
-sharded phase, so its tail numbers include generation swaps.  Results
-land in ``BENCH_serving.json`` (p50/p95/p99 from the lock-exact
-log-spaced histograms plus requests/s), alongside a bit-parity bool of
-sharded vs single outputs.
+sharded phase, so its tail numbers include generation swaps, and the
+FUSED gather+rank serve stage (``fused=True``) on both front doors —
+its outputs must match the staged path bit-exactly (``exact_scores``
+allclose; accumulation order differs).  Results land in
+``BENCH_serving.json`` (p50/p95/p99 from the lock-exact log-spaced
+histograms plus requests/s), alongside bit-parity bools of sharded and
+fused vs single-staged outputs.
 """
 from __future__ import annotations
 
 import json
-import os
 import threading
 import time
 
 import jax
 import numpy as np
 
-from benchmarks.common import trained_retriever
+from benchmarks.common import out_json, sz, trained_retriever
 from repro.launch.mesh import make_serving_mesh
 from repro.serving import RetrievalService
 
-OUT_JSON = os.path.join(os.path.dirname(__file__), "..",
-                        "BENCH_serving.json")
-B = 64                      # rows per batched serve call (CPU-sized)
-N_BATCHES = 24
+OUT_JSON = out_json("BENCH_serving.json")
+B = sz(64, 8)               # rows per batched serve call (CPU-sized)
+N_BATCHES = sz(24, 3)
 N_SHARDS = 8
 
 
@@ -55,6 +56,20 @@ def _drive(svc, batches):
     outs = [svc.serve_batch(b) for b in batches]
     wall = time.perf_counter() - t0
     return wall, outs
+
+
+def _parity(outs_a, outs_b):
+    """Bit-parity across serve outputs; ``exact_scores`` is allclose-only
+    (float dot accumulation order differs between the fused/staged and
+    plain/sharded paths)."""
+    ok = True
+    for a, b in zip(outs_a, outs_b):
+        for k in a:
+            if k == "exact_scores":
+                ok &= bool(np.allclose(a[k], b[k], rtol=1e-5, atol=1e-5))
+            else:
+                ok &= bool(np.array_equal(a[k], b[k]))
+    return ok
 
 
 def _stats_row(name, svc, wall, n_rows, rows, record):
@@ -87,6 +102,14 @@ def run() -> list:
     wall, outs_single = _drive(svc, batches)
     _stats_row("single_device", svc, wall, B * N_BATCHES, rows, record)
 
+    # ---- single-device FUSED gather+rank serve -------------------------
+    svc_f = RetrievalService(tr.cfg, tr.params, tr.index, fused=True)
+    wall, outs_f = _drive(svc_f, batches)
+    _stats_row("single_fused", svc_f, wall, B * N_BATCHES, rows, record)
+    parity_f = _parity(outs_single, outs_f)
+    rows.append(("serving/fused_bit_parity", None, parity_f))
+    record["rows"]["fused_bit_parity"] = parity_f
+
     # ---- 8-way sharded serve (quiet index) -----------------------------
     mesh = make_serving_mesh()
     svc_sh = RetrievalService(tr.cfg, tr.params, tr.index,
@@ -94,11 +117,19 @@ def run() -> list:
     wall, outs_sh = _drive(svc_sh, batches)
     _stats_row(f"sharded{N_SHARDS}", svc_sh, wall, B * N_BATCHES, rows,
                record)
-    parity = all(
-        np.array_equal(a[k], b[k])
-        for a, b in zip(outs_single, outs_sh) for k in a)
+    parity = _parity(outs_single, outs_sh)
     rows.append(("serving/sharded_bit_parity", None, parity))
     record["rows"]["sharded_bit_parity"] = parity
+
+    # ---- 8-way sharded FUSED serve -------------------------------------
+    svc_shf = RetrievalService(tr.cfg, tr.params, tr.index,
+                               n_shards=N_SHARDS, mesh=mesh, fused=True)
+    wall, outs_shf = _drive(svc_shf, batches)
+    _stats_row(f"sharded{N_SHARDS}_fused", svc_shf, wall, B * N_BATCHES,
+               rows, record)
+    parity_shf = _parity(outs_single, outs_shf)
+    rows.append(("serving/sharded_fused_bit_parity", None, parity_shf))
+    record["rows"]["sharded_fused_bit_parity"] = parity_shf
 
     # ---- sharded serve under background rebuild churn ------------------
     # double-buffered generations publish while traffic flows; the delta
@@ -112,14 +143,12 @@ def run() -> list:
                rows, record)
     record["rows"]["churn_generations"] = svc_ch.index_generation.epoch
     record["rows"]["churn_stale_serves"] = svc_ch.stats.stale_serves
-    parity_ch = all(
-        np.array_equal(a[k], b[k])
-        for a, b in zip(outs_single, outs_ch) for k in a)
+    parity_ch = _parity(outs_single, outs_ch)
     record["rows"]["churn_bit_parity"] = parity_ch
 
     # ---- micro-batcher: concurrent small requests ----------------------
     batcher = svc.make_batcher(max_batch=B, max_delay_s=0.005)
-    n_threads, n_reqs = 8, 16
+    n_threads, n_reqs = sz(8, 2), sz(16, 3)
     t0 = time.perf_counter()
 
     def producer(tid):

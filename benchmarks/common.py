@@ -3,9 +3,16 @@
 Trains ONE small streaming-VQ retriever on the synthetic stream and
 caches it (module-level) so every benchmark reuses the same model; sizes
 are CPU-budgeted (full-size configs are exercised by the dry-run).
+
+``BENCH_SMOKE=1`` (the ``scripts/test.sh`` bench-smoke tier) shrinks
+every module to seconds-scale shapes via ``sz(normal, tiny)`` and
+redirects JSON artifacts to a temp dir (``out_json``) — a crash gate
+for the bench code paths, never a source of recorded numbers.
 """
 from __future__ import annotations
 
+import os
+import tempfile
 import time
 from dataclasses import dataclass
 from typing import Dict, Optional
@@ -19,17 +26,34 @@ from repro.core import assignment_store as astore
 from repro.data import RecsysStream, StreamConfig
 from repro.launch.train import train_svq
 
-N_ITEMS = 8_000
-N_USERS = 2_000
-EMBED_DIM = 32
-N_CLUSTERS = 256
+SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
+
+def sz(normal, tiny):
+    """Bench shape: the tiny value under the BENCH_SMOKE crash gate."""
+    return tiny if SMOKE else normal
+
+
+def out_json(filename: str) -> str:
+    """Repo-root JSON artifact path; a throwaway temp path under
+    BENCH_SMOKE so smoke runs never clobber recorded full-scale rows."""
+    if SMOKE:
+        return os.path.join(tempfile.gettempdir(), "smoke_" + filename)
+    return os.path.join(os.path.dirname(__file__), "..", filename)
+
+
+N_ITEMS = sz(8_000, 1_000)
+N_USERS = sz(2_000, 256)
+EMBED_DIM = sz(32, 16)
+N_CLUSTERS = sz(256, 32)
 
 
 def bench_cfg(**kw):
     cfg = get_smoke("svq").with_(
         n_clusters=N_CLUSTERS, n_items=N_ITEMS, n_users=N_USERS,
-        embed_dim=EMBED_DIM, user_hist_len=8, clusters_per_query=32,
-        candidates_out=512, chunk_size=8)
+        embed_dim=EMBED_DIM, user_hist_len=8,
+        clusters_per_query=sz(32, 8), candidates_out=sz(512, 64),
+        chunk_size=8)
     return cfg.with_(**kw) if kw else cfg
 
 
@@ -56,6 +80,7 @@ def trained_retriever(key: str = "default", steps: int = 250,
                       batch: int = 256, **cfg_kw) -> TrainedRetriever:
     if key in _CACHE:
         return _CACHE[key]
+    steps, batch = sz(steps, 10), sz(batch, 64)
     cfg = bench_cfg(**cfg_kw)
     stream = make_stream(cfg)
     t0 = time.perf_counter()

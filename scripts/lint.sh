@@ -4,6 +4,14 @@
 # failure so CI treats lint like any other tier.
 set -uo pipefail
 cd "$(dirname "$0")/.."
+# Tracked-bytecode gate: compiled artifacts must never re-enter the
+# repo (they are .gitignore'd; this catches forced adds).
+tracked_pyc=$(git ls-files | grep -E '(^|/)__pycache__/|\.py[cod]$' || true)
+if [ -n "$tracked_pyc" ]; then
+  echo "[lint] tracked bytecode files found:"
+  echo "$tracked_pyc" | head -20
+  exit 1
+fi
 if command -v ruff >/dev/null 2>&1; then
   echo "[lint] ruff check"
   exec ruff check src benchmarks tests examples scripts

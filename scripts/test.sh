@@ -21,8 +21,14 @@
 #                   exporter, index health) under 8 host-platform
 #                   devices, so the sharded staged-serve span path runs
 #                   over a real mesh.
+#   bench-smoke     BENCH_SMOKE=1 python -m benchmarks.run: every
+#                   benchmark module end-to-end at seconds-scale shapes
+#                   (benchmarks/common.py sz()), JSON artifacts
+#                   redirected to a temp dir.  A crash gate for the
+#                   bench code paths — numbers are never recorded.
 #   lint            scripts/lint.sh: ruff when installed, else a
-#                   compileall syntax gate (nonzero on failure).
+#                   compileall syntax gate (nonzero on failure); also
+#                   fails on tracked bytecode.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -42,6 +48,7 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
     tests/test_batcher.py \
     tests/test_swap_telemetry.py \
     tests/test_deltas.py \
+    tests/test_fused_serve.py \
   || { failures=$((failures + 1)); echo "[tier-2] FAILED"; }
 
 echo "[tier-3] observability tier (8 host-platform devices)"
@@ -52,6 +59,10 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
     tests/test_obs_exporter.py \
     tests/test_obs_health.py \
   || { failures=$((failures + 1)); echo "[tier-3] FAILED"; }
+
+echo "[bench-smoke] BENCH_SMOKE=1 python -m benchmarks.run"
+BENCH_SMOKE=1 python -m benchmarks.run \
+  || { failures=$((failures + 1)); echo "[bench-smoke] FAILED"; }
 
 echo "[lint] scripts/lint.sh"
 ./scripts/lint.sh || { failures=$((failures + 1)); echo "[lint] FAILED"; }

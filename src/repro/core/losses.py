@@ -46,22 +46,29 @@ def _ce_rows_kernel(u: jax.Array, item_emb: jax.Array, bias: jax.Array,
                     log_q: jax.Array) -> jax.Array:
     """Per-row CE through the fused Pallas inbatch_softmax kernel.
 
-    Forward avoids materializing the (B, B) logits in HBM; the backward
-    pass is the reference VJP (which does materialize them — a fused
-    backward kernel is a ROADMAP follow-up).
+    Neither pass materializes the (B, B) logits in HBM: the forward is
+    the online-logsumexp kernel, and the backward is the flash-style
+    blocked VJP that recomputes logits tiles from the saved lse stats
+    (kernels/inbatch_softmax.py).
     """
     from repro.kernels import ops as kops
     return kops.inbatch_softmax(u, item_emb, bias, log_q)
 
 
 def _ce_rows_fwd(u, item_emb, bias, log_q):
-    return _ce_rows_kernel(u, item_emb, bias, log_q), \
-        (u, item_emb, bias, log_q)
+    from repro.kernels import ops as kops
+    loss, m, l = kops.inbatch_softmax_stats(u, item_emb, bias, log_q)
+    lse = m + jnp.log(l)
+    return loss, (u, item_emb, bias, log_q, lse)
 
 
 def _ce_rows_bwd(res, g):
-    _, vjp = jax.vjp(_ce_rows_ref, *res)
-    return vjp(g)
+    from repro.kernels import ops as kops
+    u, item_emb, bias, log_q, lse = res
+    du, dv, dbias, dlogq = kops.inbatch_softmax_bwd(u, item_emb, bias,
+                                                    log_q, lse, g)
+    return (du.astype(u.dtype), dv.astype(item_emb.dtype),
+            dbias.astype(bias.dtype), dlogq.astype(log_q.dtype))
 
 
 _ce_rows_kernel.defvjp(_ce_rows_fwd, _ce_rows_bwd)

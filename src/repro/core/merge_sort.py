@@ -117,6 +117,76 @@ def merge_sort_serve(cluster_scores: jax.Array,
     return pos[order][:target], sc[order][:target]
 
 
+@partial(jax.jit, static_argnames=("chunk", "target", "l", "exact"))
+def fused_gather_rank_lax(u: jax.Array, cluster_scores: jax.Array,
+                          starts: jax.Array, lengths: jax.Array,
+                          limits: jax.Array, bias_flat: jax.Array,
+                          ids_flat: jax.Array, emb_flat: jax.Array,
+                          chunk: int, target: int, l: int,
+                          exact: bool = True
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                     jax.Array]:
+    """Single-query fused Alg. 1: merge + candidate gather + Eq. 11 score.
+
+    The lax counterpart of ``kernels.merge_serve.fused_gather_rank_pallas``
+    (vmap over queries via ``kernels/ref.py: fused_gather_rank_ref``):
+    instead of materializing the (C, L) bias slab and re-gathering the
+    (target, d) candidate embeddings afterwards, each pop dynamically
+    gathers its chunk straight from the flat index arrays and scores it
+    against ``u`` in place.  Heads are maintained incrementally — one
+    O(1) refresh per pop — so per-pop work is O(C) select + O(chunk·d).
+
+    u: (d,); cluster_scores/starts/lengths/limits: (C,) with ``starts``
+    flat addresses and ``limits`` the per-lane clamp bound;
+    bias_flat/ids_flat: (N,); emb_flat: (N, d).  Returns
+    (pos, merge_scores, cand_ids, exact_scores), each (target,), with
+    pos encoded ``c * l + idx`` like ``merge_sort_serve``.
+    """
+    C = cluster_scores.shape[0]
+    n_steps = -(-target // chunk) + (C if exact else 0)
+    ar = jnp.arange(chunk, dtype=jnp.int32)
+    iota_c = jnp.arange(C, dtype=jnp.int32)
+    starts = starts.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    limits = limits.astype(jnp.int32)
+    cs32 = cluster_scores.astype(jnp.float32)
+    u32 = u.astype(jnp.float32)
+    head0 = bias_flat[jnp.minimum(starts, limits)].astype(jnp.float32)
+    # invalid lanes report the clip-to-first-slot id, like the unfused
+    # ``item_ids[slab[clip(pos, 0)]]`` gather
+    id_clip = ids_flat[jnp.minimum(starts[0], limits[0])]
+
+    def step(carry, _):
+        ptr, head_b, n_out = carry
+        head_s = jnp.where(ptr < lengths, cs32 + head_b, NEG)
+        ci = jnp.argmax(head_s)
+        base = ptr[ci]
+        idx = base + ar
+        addr = jnp.minimum(starts[ci] + idx, limits[ci])
+        bias_v = bias_flat[addr].astype(jnp.float32)
+        dot_v = emb_flat[addr].astype(jnp.float32) @ u32
+        valid = ((idx < lengths[ci]) & (head_s[ci] > NEG / 2)
+                 & (n_out < target))
+        pos = jnp.where(valid, ci * l + idx, -1)
+        sc = jnp.where(valid, cs32[ci] + bias_v, NEG)
+        ids = jnp.where(valid, ids_flat[addr], id_clip)
+        rk = jnp.where(valid, dot_v + bias_v, NEG)
+        new_head = bias_flat[jnp.minimum(starts[ci] + base + chunk,
+                                         limits[ci])].astype(jnp.float32)
+        head_b = jnp.where(iota_c == ci, new_head, head_b)
+        return ((ptr.at[ci].add(chunk), head_b, n_out + jnp.sum(valid)),
+                (pos, sc, ids, rk))
+
+    ptr0 = jnp.zeros((C,), jnp.int32)
+    _, (pos, sc, ids, rk) = jax.lax.scan(
+        step, (ptr0, head0, jnp.int32(0)), None, length=n_steps)
+    pos, sc = pos.reshape(-1), sc.reshape(-1)
+    ids, rk = ids.reshape(-1), rk.reshape(-1)
+    order = jnp.argsort(pos < 0, stable=True)
+    return (pos[order][:target], sc[order][:target],
+            ids[order][:target], rk[order][:target])
+
+
 def full_sort_topk(cluster_scores: jax.Array, bias_lists: jax.Array,
                    lengths: jax.Array, target: int
                    ) -> Tuple[jax.Array, jax.Array]:

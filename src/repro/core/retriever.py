@@ -186,7 +186,7 @@ def train_step(params: Params, state: IndexState, cfg: SVQConfig,
         delta, cfg.beta, rewards=rewards,
         eta=cfg.eta if cfg.n_tasks > 1 else None, valid=impressed)
     new_vq = vq.ema_update(state.vq, v_emb, assignment, weight,
-                           cfg.ema_alpha)
+                           cfg.ema_alpha, use_kernel=use_kernel)
 
     # -- real-time PS write-back (index immediacy) ------------------------
     new_store = astore.write(state.store, batch["item_id"], assignment,
@@ -263,6 +263,36 @@ def serve_kernel(top_scores: jax.Array, bias: jax.Array,
                                 exact)
 
 
+def fused_gather_rank(u: jax.Array, top_scores: jax.Array,
+                      starts: jax.Array, lengths: jax.Array,
+                      limits: jax.Array, bias_flat: jax.Array,
+                      ids_flat: jax.Array, emb_flat: jax.Array,
+                      chunk: int, target: int, l: int,
+                      use_kernel: bool = False, exact: bool = True
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                 jax.Array]:
+    """Dispatch point for the fused merge+gather+rank serve stage.
+
+    Like ``serve_kernel`` but consuming FLAT index arrays: per-query
+    (B, C) cluster scores / flat start addresses / lengths / clamp
+    limits, plus the index's (N,) bias, (N,) ids and (N, d) embedding
+    payloads.  Each pop dynamically gathers its chunk straight from the
+    flat arrays — no (B, C, L) bias slab or (B, S, d) candidate slab in
+    HBM.  Returns (pos, merge_scores, cand_ids, exact_scores), each
+    (B, target); pos/merge_scores are bit-identical to ``serve_kernel``
+    on the equivalent slab.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.fused_gather_rank(u, top_scores, starts, lengths,
+                                      limits, bias_flat, ids_flat,
+                                      emb_flat, chunk, target, l, exact)
+    from repro.kernels import ref as kref
+    return kref.fused_gather_rank_ref(u, top_scores, starts, lengths,
+                                      limits, bias_flat, ids_flat,
+                                      emb_flat, chunk, target, l, exact)
+
+
 def serve_stage_rank(params: Params, state: IndexState, cfg: SVQConfig,
                      batch: Dict[str, jax.Array], task: int = 0,
                      use_kernel: bool = False) -> Dict[str, jax.Array]:
@@ -280,26 +310,46 @@ def serve_stage_rank(params: Params, state: IndexState, cfg: SVQConfig,
         top_scores, top_clusters = rank_clusters(state, u,
                                                  cfg.clusters_per_query,
                                                  use_kernel=use_kernel)
-    return dict(user_feat=user_feat, hist_emb=hist_emb,
+    return dict(user_feat=user_feat, hist_emb=hist_emb, u=u,
                 top_scores=top_scores, top_clusters=top_clusters)
 
 
 def serve_stage_merge(cfg: SVQConfig, index: astore.ServingIndex,
                       s1: Dict[str, jax.Array],
                       items_per_cluster: int = 256,
-                      use_kernel: bool = False) -> Dict[str, jax.Array]:
-    """Stage 2 of serve: slab fetch + Alg. 1 merge -> candidate ids."""
+                      use_kernel: bool = False,
+                      fused: bool = False) -> Dict[str, jax.Array]:
+    """Stage 2 of serve: slab fetch + Alg. 1 merge -> candidate ids.
+
+    ``fused=True`` skips the (B, C, L) bias-slab materialization: the
+    merge, candidate-id gather and exact Eq. 11 dot are fused into one
+    pass over the flat index arrays (pl.ds gathers in-kernel; the lax
+    fallback gathers per pop).  Bit-identical pos / merge_scores /
+    cand_ids; ``exact_scores`` matches the unfused gather+einsum to
+    float accumulation order.
+    """
     top_scores, top_clusters = s1["top_scores"], s1["top_clusters"]
     starts = index.offsets[top_clusters]                     # (B, C)
     counts = index.counts[top_clusters]       # live prefix (tombstone-aware)
     L = items_per_cluster
+    lengths = jnp.minimum(counts, L)
+    S = cfg.candidates_out
+
+    if fused:
+        limits = jnp.full_like(starts, index.n_items - 1)
+        with trace.annotate("fused_gather_rank"):
+            pos, msort_scores, cand_ids, exact_scores = fused_gather_rank(
+                s1["u"], top_scores, starts, lengths, limits,
+                index.item_bias, index.item_ids, index.item_emb,
+                cfg.chunk_size, S, L, use_kernel=use_kernel)
+        return dict(cand_ids=cand_ids, valid=pos >= 0,
+                    merge_scores=msort_scores, exact_scores=exact_scores)
+
     slab = starts[..., None] + jnp.arange(L)[None, None, :]  # (B, C, L)
     slab = jnp.minimum(slab, index.n_items - 1)
-    lengths = jnp.minimum(counts, L)
     bias = index.item_bias[slab]                             # (B, C, L)
 
     # ---- Alg. 1 merge sort over (cluster personality + item bias) ------
-    S = cfg.candidates_out
     with trace.annotate("merge_serve"):
         pos, msort_scores = serve_kernel(top_scores, bias, lengths,
                                          cfg.chunk_size, S,
@@ -311,10 +361,17 @@ def serve_stage_merge(cfg: SVQConfig, index: astore.ServingIndex,
         slab.reshape(slab.shape[0], -1),
         (c_idx * L + i_idx).astype(jnp.int32), axis=1)       # (B, S)
     cand_ids = index.item_ids[flat]
-    # the index's emb/bias payload is NOT gathered here: the ranking
-    # step re-embeds candidates from the model tables in stage 3
+    # exact Eq. 11 candidate score u.v + bias from the index payload —
+    # what the fused path computes in-kernel (the ranking step still
+    # re-embeds candidates from the model tables in stage 3)
+    exact_scores = jnp.where(
+        valid,
+        jnp.einsum("bsd,bd->bs", index.item_emb[flat].astype(jnp.float32),
+                   s1["u"].astype(jnp.float32))
+        + index.item_bias[flat].astype(jnp.float32),
+        merge_sort.NEG)
     return dict(cand_ids=cand_ids, valid=valid,
-                merge_scores=msort_scores)
+                merge_scores=msort_scores, exact_scores=exact_scores)
 
 
 def serve_stage_ranking(params: Params, cfg: SVQConfig,
@@ -336,6 +393,7 @@ def serve_stage_ranking(params: Params, cfg: SVQConfig,
         item_ids=jnp.take_along_axis(cand_ids, order, axis=1),
         scores=jnp.take_along_axis(rscores, order, axis=1),
         merge_scores=s2["merge_scores"],
+        exact_scores=s2["exact_scores"],
         index_ids=cand_ids,
         valid=jnp.take_along_axis(valid, order, axis=1))
 
@@ -343,15 +401,18 @@ def serve_stage_ranking(params: Params, cfg: SVQConfig,
 def serve(params: Params, state: IndexState, cfg: SVQConfig,
           index: astore.ServingIndex, batch: Dict[str, jax.Array],
           items_per_cluster: int = 256, task: int = 0,
-          use_kernel: bool = False) -> Dict[str, jax.Array]:
+          use_kernel: bool = False,
+          fused: bool = False) -> Dict[str, jax.Array]:
     """Full retrieval for a user batch -> final candidate ids + scores.
 
     Composes the three stage functions (rank -> merge -> ranking); under
-    one jit this traces exactly the pre-split op sequence.
+    one jit this traces exactly the pre-split op sequence.  ``fused``
+    selects the slab-free merge+gather+rank stage 2 (bit-identical
+    candidates; exact_scores allclose).
     """
     s1 = serve_stage_rank(params, state, cfg, batch, task=task,
                           use_kernel=use_kernel)
     s2 = serve_stage_merge(cfg, index, s1,
                            items_per_cluster=items_per_cluster,
-                           use_kernel=use_kernel)
+                           use_kernel=use_kernel, fused=fused)
     return serve_stage_ranking(params, cfg, s1, s2, task=task)

@@ -75,19 +75,28 @@ def assign(vq: VQState, v: jax.Array, s: float = 5.0,
 
 
 def ema_update(vq: VQState, v: jax.Array, assignment: jax.Array,
-               weight: jax.Array, alpha: float) -> VQState:
+               weight: jax.Array, alpha: float,
+               use_kernel: bool = False) -> VQState:
     """Batched Eq. 7-8 (single-task) / Eq. 12-13 (weight carries rewards).
 
     Per streaming batch: w_k <- alpha*w_k + (1-alpha)*sum_{j->k} weight_j*v_j
                          c_k <- alpha*c_k + (1-alpha)*sum_{j->k} weight_j
     ``weight_j`` = (delta_j)^beta  [* prod_p (1+h_jp)^eta_p for multi-task].
+
+    ``use_kernel=True`` routes the two segment reductions through the
+    blocked one-hot-matmul Pallas kernel (no TPU scatter); summation
+    order differs from ``segment_sum``, so parity is allclose.
     """
     k = vq.n_clusters
-    v32 = v.astype(jnp.float32)
-    w_add = jax.ops.segment_sum(weight[:, None] * v32, assignment, k)
-    c_add = jax.ops.segment_sum(weight, assignment, k)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        w_add, c_add = kops.ema_segment_sum(v, assignment, weight, k)
+    else:
+        v32 = v.astype(jnp.float32)
+        w_add = jax.ops.segment_sum(weight[:, None] * v32, assignment, k)
+        c_add = jax.ops.segment_sum(weight, assignment, k)
     w = alpha * vq.w + (1.0 - alpha) * w_add
-    c = alpha * vq.c + (1.0 - alpha) * c_add
+    c = alpha * vq.c + (1.0 - alpha) * c_add.astype(vq.c.dtype)
     return VQState(w=w, c=c)
 
 

@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the fused serving path (§3.4, Alg. 1, Fig. 2).
 
-Two kernels cover the latency-critical indexing step of serving:
+Four kernels cover the latency-critical indexing step of serving:
 
 cluster_rank — blocked cluster scoring + top-n over the codebook.  Eq. 5 /
     Eq. 11 ranks clusters by ``u . e_k``; instead of materializing the
@@ -35,13 +35,46 @@ merge_serve — batched k-way chunked merge (Alg. 1).  One grid step per
     identical output; the wrapper compacts the chunked emissions
     forward (stable) exactly like the lax.scan reference.
 
-Per-cluster head/row gathers use iota-mask reductions rather than
-``dynamic_slice`` so the kernel lowers to pure VPU selects/adds — with
-C=128, L=256 f32 the whole per-query working set is ~128 KiB of VMEM.
+merge_serve_ds — the dynamic-slice variant of the same merge.  The
+    original kernel's per-pop head/row gathers are iota-mask reductions
+    (pure VPU selects/adds, but O(C·L) work per pop); this variant keeps
+    a cached (C,) head-value carry and uses ``lax.dynamic_slice`` for
+    the O(chunk) row window + O(1) head refresh per pop, so per-pop work
+    is O(C + chunk^2) regardless of L.  Bit-identical outputs; both are
+    benchmarked in bench_merge_sort.
 
-The pure-lax fallback (``kernels/ref.py: merge_serve_ref``) vmaps the
-``lax.scan`` implementation; ``core/retriever.serve_kernel`` is the
-single dispatch point that picks Pallas vs fallback via ``use_kernel``.
+fused_gather_rank — the whole serve() indexing hot path in ONE kernel:
+    the k-way merge pops candidate positions AND consumes them in-kernel
+    via ``pl.ds`` dynamic-slice gathers against the flat serving-index
+    arrays (bias / ids / personality embeddings), scoring each candidate
+    against the query (Eq. 11 exact score ``u . v_emb + v_bias``) as it
+    is emitted.  The (B, C, L) bias slab and the (B, S, d) candidate
+    embedding slab never materialize in HBM — the unfused path gathers
+    both between `merge_serve` and the ranking step.  Chunk gathers read
+    an aligned [w, w+chunk) window (``w`` clamped so the window stays in
+    bounds) and realign lanes with a one-hot select, so a pop issues 3
+    dynamic slices + one (chunk, d) dot instead of per-lane scatters.
+    Per-lane addresses are ``min(start_c + idx, limit_c)`` — with
+    ``limit = n_items - 1`` (plain) or ``owner*cap + cap - 1`` (sharded
+    flat layout) this reproduces the unfused slab clamp bit-exactly, so
+    pop order and all outputs match the unfused serve().
+
+Per-cluster head/row gathers in ``merge_serve`` use iota-mask reductions
+rather than ``dynamic_slice`` so the kernel lowers to pure VPU
+selects/adds — with C=128, L=256 f32 the whole per-query working set is
+~128 KiB of VMEM.
+
+The pure-lax fallbacks (``kernels/ref.py: merge_serve_ref`` /
+``fused_gather_rank_ref``) vmap the ``lax.scan`` implementations;
+``core/retriever.serve_kernel`` / ``retriever.fused_gather_rank`` are
+the single dispatch points that pick Pallas vs fallback via
+``use_kernel``.
+
+VMEM note for ``fused_gather_rank``: the flat index arrays are passed as
+whole-array blocks, which interpret mode streams from host memory; on a
+real TPU they exceed VMEM and must live in HBM/ANY memory space with the
+``pl.ds`` loads lowered to DMAs — part of the Mosaic checklist the first
+hardware session must run (see ROADMAP).
 
 NOTE: this container has no TPU, so both kernels are validated in
 interpret mode only (like the rest of kernels/).  Iotas are built
@@ -219,3 +252,241 @@ def merge_serve_pallas(cluster_scores: jax.Array, bias_lists: jax.Array,
     pos = jnp.take_along_axis(pos, order, axis=-1)[:, :target]
     sc = jnp.take_along_axis(sc, order, axis=-1)[:, :target]
     return pos, sc
+
+
+# ---------------------------------------------------------------------------
+# merge_serve_ds: dynamic-slice pop loop (O(C + chunk^2) per pop)
+# ---------------------------------------------------------------------------
+
+def _merge_serve_ds_kernel(cs_ref, bl_ref, ln_ref, pos_ref, sc_ref,
+                           *, c: int, l: int, lp: int, chunk: int,
+                           target: int, n_steps: int):
+    cs = cs_ref[0, :].astype(jnp.float32)                # (C,)
+    bl = bl_ref[0, :, :].astype(jnp.float32)             # (C, Lp)
+    ln = ln_ref[0, :]                                    # (C,)
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (c, 1), 0)[:, 0]
+    arange_chunk = jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)[:, 0]
+    iota_win = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+
+    def step(t, carry):
+        ptr, head_b, n_out = carry
+        head_s = jnp.where(ptr < ln, cs + head_b, NEG)
+        ci = jnp.argmax(head_s)
+        sel = iota_c == ci
+        base = jnp.sum(jnp.where(sel, ptr, 0))
+        len_c = jnp.sum(jnp.where(sel, ln, 0))
+        cs_c = jnp.sum(jnp.where(sel, cs, 0.0))
+        idx = base + arange_chunk
+        # dynamic-slice window read (replaces the O(C*L) masked scan):
+        # window start clamped so [w, w+chunk) stays inside the slab,
+        # lanes realigned with a one-hot select
+        w = jnp.clip(base, 0, lp - chunk)
+        win = jax.lax.dynamic_slice(bl, (ci, w), (1, chunk))[0]
+        d = jnp.minimum(idx, l - 1) - w
+        vals = jnp.sum(jnp.where(iota_win == d[:, None],
+                                 win[None, :], 0.0), axis=1)
+        valid = ((idx < len_c) & (jnp.max(head_s) > NEG / 2)
+                 & (n_out < target))
+        pos_ref[0, pl.ds(t * chunk, chunk)] = jnp.where(
+            valid, ci * l + idx, -1).astype(jnp.int32)
+        sc_ref[0, pl.ds(t * chunk, chunk)] = jnp.where(
+            valid, cs_c + vals, NEG)
+        # O(1) head refresh: only the popped cluster's head is re-read
+        new_ptr = base + chunk
+        h = jax.lax.dynamic_slice(
+            bl, (ci, jnp.minimum(new_ptr, lp - 1)), (1, 1))[0, 0]
+        return (jnp.where(sel, ptr + chunk, ptr),
+                jnp.where(sel, h, head_b),
+                n_out + jnp.sum(valid.astype(jnp.int32)))
+
+    ptr0 = jnp.zeros((c,), jnp.int32)
+    head0 = bl[:, 0]                                     # ptr==0 everywhere
+    jax.lax.fori_loop(0, n_steps, step, (ptr0, head0, jnp.int32(0)))
+
+
+def merge_serve_ds_pallas(cluster_scores: jax.Array, bias_lists: jax.Array,
+                          lengths: jax.Array, chunk: int, target: int,
+                          exact: bool = True, interpret: bool = True
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Dynamic-slice variant of ``merge_serve_pallas`` — same signature,
+    bit-identical outputs, O(C + chunk^2) work per pop instead of O(C·L).
+    """
+    bsz, c = cluster_scores.shape
+    l = bias_lists.shape[-1]
+    lp = max(l, chunk)          # window reads need L >= chunk
+    if lp != l:
+        bias_lists = jnp.pad(bias_lists, ((0, 0), (0, 0), (0, lp - l)))
+    n_steps = -(-target // chunk) + (c if exact else 0)
+    width = n_steps * chunk
+
+    pos, sc = pl.pallas_call(
+        functools.partial(_merge_serve_ds_kernel, c=c, l=l, lp=lp,
+                          chunk=chunk, target=target, n_steps=n_steps),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, c), lambda b: (b, 0)),
+            pl.BlockSpec((1, c, lp), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, c), lambda b: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, width), lambda b: (b, 0)),
+            pl.BlockSpec((1, width), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, width), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, width), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cluster_scores, bias_lists, lengths.astype(jnp.int32))
+    order = jnp.argsort(pos < 0, axis=-1, stable=True)
+    pos = jnp.take_along_axis(pos, order, axis=-1)[:, :target]
+    sc = jnp.take_along_axis(sc, order, axis=-1)[:, :target]
+    return pos, sc
+
+
+# ---------------------------------------------------------------------------
+# fused_gather_rank: merge + in-kernel slab gather + exact Eq. 11 scoring
+# ---------------------------------------------------------------------------
+
+def _fused_gather_rank_kernel(u_ref, cs_ref, st_ref, ln_ref, lim_ref,
+                              bias_ref, ids_ref, emb_ref,
+                              pos_ref, sc_ref, id_ref, rk_ref,
+                              *, c: int, l: int, chunk: int, target: int,
+                              n_steps: int):
+    u = u_ref[0, :].astype(jnp.float32)                  # (d,)
+    cs = cs_ref[0, :].astype(jnp.float32)                # (C,)
+    st = st_ref[0, :]                                    # (C,) flat starts
+    ln = ln_ref[0, :]                                    # (C,)
+    lim = lim_ref[0, :]                                  # (C,) clamp bounds
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (c, 1), 0)[:, 0]
+    arange_chunk = jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)[:, 0]
+    iota_win = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+
+    # head init: C single-element pl.ds reads (the only O(C) gather pass)
+    def init_head(ci, hb):
+        a = jnp.minimum(st[ci], lim[ci])
+        return hb.at[ci].set(pl.load(bias_ref, (pl.ds(a, 1),))[0])
+    head0 = jax.lax.fori_loop(0, c, init_head,
+                              jnp.zeros((c,), jnp.float32))
+    # the id an invalid lane reports: the unfused path clips pos to 0,
+    # i.e. reads cluster 0's first slab slot — reproduce that bit-exactly
+    id_clip = pl.load(ids_ref,
+                      (pl.ds(jnp.minimum(st[0], lim[0]), 1),))[0]
+
+    def step(t, carry):
+        ptr, head_b, n_out = carry
+        head_s = jnp.where(ptr < ln, cs + head_b, NEG)
+        ci = jnp.argmax(head_s)
+        sel = iota_c == ci
+        base = jnp.sum(jnp.where(sel, ptr, 0))
+        len_c = jnp.sum(jnp.where(sel, ln, 0))
+        cs_c = jnp.sum(jnp.where(sel, cs, 0.0))
+        st_c = jnp.sum(jnp.where(sel, st, 0))
+        lim_c = jnp.sum(jnp.where(sel, lim, 0))
+        idx = base + arange_chunk
+        # per-lane flat addresses with the unfused slab clamp; the window
+        # [w, w+chunk) covers every clamped lane, one-hot realigned
+        tlane = jnp.minimum(st_c + idx, lim_c)
+        w = jnp.maximum(jnp.minimum(st_c + base, lim_c - chunk + 1), 0)
+        d = tlane - w
+        win_sel = iota_win == d[:, None]                 # (chunk, chunk)
+        win_b = pl.load(bias_ref,
+                        (pl.ds(w, chunk),)).astype(jnp.float32)
+        win_i = pl.load(ids_ref, (pl.ds(w, chunk),))
+        win_e = pl.load(emb_ref, (pl.ds(w, chunk),
+                                  slice(None))).astype(jnp.float32)
+        win_dot = jax.lax.dot_general(
+            win_e, u, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (chunk,)
+        bias_v = jnp.sum(jnp.where(win_sel, win_b[None, :], 0.0), axis=1)
+        ids_v = jnp.sum(jnp.where(win_sel, win_i[None, :], 0), axis=1)
+        dot_v = jnp.sum(jnp.where(win_sel, win_dot[None, :], 0.0), axis=1)
+        valid = ((idx < len_c) & (jnp.max(head_s) > NEG / 2)
+                 & (n_out < target))
+        sl = pl.ds(t * chunk, chunk)
+        pos_ref[0, sl] = jnp.where(valid, ci * l + idx, -1).astype(
+            jnp.int32)
+        sc_ref[0, sl] = jnp.where(valid, cs_c + bias_v, NEG)
+        id_ref[0, sl] = jnp.where(valid, ids_v, id_clip).astype(jnp.int32)
+        rk_ref[0, sl] = jnp.where(valid, dot_v + bias_v, NEG)
+        # O(1) head refresh for the popped cluster
+        h = pl.load(bias_ref, (pl.ds(
+            jnp.minimum(st_c + base + chunk, lim_c), 1),))[0]
+        return (jnp.where(sel, ptr + chunk, ptr),
+                jnp.where(sel, h, head_b),
+                n_out + jnp.sum(valid.astype(jnp.int32)))
+
+    ptr0 = jnp.zeros((c,), jnp.int32)
+    jax.lax.fori_loop(0, n_steps, step, (ptr0, head0, jnp.int32(0)))
+
+
+def fused_gather_rank_pallas(u: jax.Array, cluster_scores: jax.Array,
+                             starts: jax.Array, lengths: jax.Array,
+                             limits: jax.Array, bias_flat: jax.Array,
+                             ids_flat: jax.Array, emb_flat: jax.Array,
+                             chunk: int, target: int, l: int,
+                             exact: bool = True, interpret: bool = True
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                        jax.Array]:
+    """Fused Alg. 1 merge + candidate gather + exact Eq. 11 scoring.
+
+    u: (B, d) queries; cluster_scores/starts/lengths/limits: (B, C) with
+    ``starts`` flat addresses into the 1-D index arrays and ``limits``
+    the per-lane clamp bound (``n_items - 1`` plain, shard-row end in
+    the flattened sharded layout); bias_flat/ids_flat: (N,),
+    emb_flat: (N, d).  ``l`` is the per-cluster slab width the flat
+    positions are encoded against (``pos = c * l + idx``).
+
+    Returns (pos, merge_scores, cand_ids, exact_scores), each
+    (B, target).  pos/merge_scores are bit-identical to
+    ``merge_serve_pallas`` over the equivalent slab; cand_ids is
+    bit-identical to the unfused ``item_ids[slab-gather]`` (including
+    the clip-to-first-slot semantics on invalid lanes); exact_scores is
+    ``u . emb + bias`` on valid lanes and NEG elsewhere — the (B, C, L)
+    bias slab and (B, S, d) embedding slab never round-trip HBM.
+    """
+    bsz, c = cluster_scores.shape
+    n, dim = emb_flat.shape
+    n_steps = -(-target // chunk) + (c if exact else 0)
+    width = n_steps * chunk
+    if n < chunk:               # window reads need N >= chunk
+        pad = chunk - n
+        bias_flat = jnp.pad(bias_flat, (0, pad))
+        ids_flat = jnp.pad(ids_flat, (0, pad), constant_values=-1)
+        emb_flat = jnp.pad(emb_flat, ((0, pad), (0, 0)))
+        n = chunk
+
+    pos, sc, ids, rk = pl.pallas_call(
+        functools.partial(_fused_gather_rank_kernel, c=c, l=l,
+                          chunk=chunk, target=target, n_steps=n_steps),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, dim), lambda b: (b, 0)),
+            pl.BlockSpec((1, c), lambda b: (b, 0)),
+            pl.BlockSpec((1, c), lambda b: (b, 0)),
+            pl.BlockSpec((1, c), lambda b: (b, 0)),
+            pl.BlockSpec((1, c), lambda b: (b, 0)),
+            # whole-array index blocks; HBM + DMA on real hardware
+            pl.BlockSpec((n,), lambda b: (0,)),
+            pl.BlockSpec((n,), lambda b: (0,)),
+            pl.BlockSpec((n, dim), lambda b: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, width), lambda b: (b, 0)),
+            pl.BlockSpec((1, width), lambda b: (b, 0)),
+            pl.BlockSpec((1, width), lambda b: (b, 0)),
+            pl.BlockSpec((1, width), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, width), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, width), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, width), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, width), jnp.float32),
+        ],
+        interpret=interpret,
+    )(u, cluster_scores, starts.astype(jnp.int32),
+      lengths.astype(jnp.int32), limits.astype(jnp.int32),
+      bias_flat, ids_flat, emb_flat)
+    order = jnp.argsort(pos < 0, axis=-1, stable=True)
+    take = lambda x: jnp.take_along_axis(x, order, axis=-1)[:, :target]
+    return take(pos), take(sc), take(ids), take(rk)

@@ -14,11 +14,15 @@ import jax.numpy as jnp
 
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.inbatch_softmax import inbatch_softmax_pallas
+from repro.kernels.inbatch_softmax import (inbatch_softmax_bwd_pallas,
+                                           inbatch_softmax_pallas)
 from repro.kernels.merge_serve import (cluster_rank_pallas,
+                                       fused_gather_rank_pallas,
+                                       merge_serve_ds_pallas,
                                        merge_serve_pallas)
 from repro.kernels.topk_dot import topk_dot_pallas
 from repro.kernels.vq_assign import vq_assign_pallas
+from repro.kernels.vq_ema import ema_segment_sum_pallas
 
 
 def _on_tpu() -> bool:
@@ -63,6 +67,43 @@ def merge_serve(cluster_scores: jax.Array, bias_lists: jax.Array,
                               interpret=not _on_tpu())
 
 
+@partial(jax.jit, static_argnames=("chunk", "target", "exact"))
+def merge_serve_ds(cluster_scores: jax.Array, bias_lists: jax.Array,
+                   lengths: jax.Array, chunk: int, target: int,
+                   exact: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Dynamic-slice pop-loop variant of ``merge_serve`` (bit-identical;
+    O(C + chunk^2) per pop instead of O(C·L))."""
+    return merge_serve_ds_pallas(cluster_scores, bias_lists, lengths,
+                                 chunk, target, exact,
+                                 interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("chunk", "target", "l", "exact"))
+def fused_gather_rank(u: jax.Array, cluster_scores: jax.Array,
+                      starts: jax.Array, lengths: jax.Array,
+                      limits: jax.Array, bias_flat: jax.Array,
+                      ids_flat: jax.Array, emb_flat: jax.Array,
+                      chunk: int, target: int, l: int, exact: bool = True
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                 jax.Array]:
+    """Fused serve hot path: Alg. 1 merge + in-kernel ``pl.ds`` candidate
+    gathers + exact Eq. 11 scoring, no (B, C, L) / (B, S, d) slab in
+    HBM.  -> (pos, merge_scores, cand_ids, exact_scores)."""
+    return fused_gather_rank_pallas(u, cluster_scores, starts, lengths,
+                                    limits, bias_flat, ids_flat, emb_flat,
+                                    chunk, target, l, exact,
+                                    interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("k", "block_b"))
+def ema_segment_sum(v: jax.Array, assignment: jax.Array, weight: jax.Array,
+                    k: int, block_b: int = 256
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Eq. 7-8 EMA batch reductions as a blocked one-hot matmul."""
+    return ema_segment_sum_pallas(v, assignment, weight, k, block_b,
+                                  interpret=not _on_tpu())
+
+
 @jax.jit
 def index_sort(cluster: jax.Array, bias: jax.Array) -> jax.Array:
     """Fused (cluster asc, bias desc) order via ONE integer-key sort.
@@ -100,3 +141,25 @@ def inbatch_softmax(u: jax.Array, v: jax.Array, bias: jax.Array,
                     block_b: int = 256, block_c: int = 256) -> jax.Array:
     return inbatch_softmax_pallas(u, v, bias, log_q, block_b, block_c,
                                   interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("block_b", "block_c"))
+def inbatch_softmax_stats(u: jax.Array, v: jax.Array, bias: jax.Array,
+                          log_q: Optional[jax.Array] = None,
+                          block_b: int = 256, block_c: int = 256
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Forward that also returns the online (m, l) softmax stats the
+    flash-style backward recomputes logits blocks from."""
+    return inbatch_softmax_pallas(u, v, bias, log_q, block_b, block_c,
+                                  interpret=not _on_tpu(),
+                                  return_stats=True)
+
+
+@partial(jax.jit, static_argnames=("block_b", "block_c"))
+def inbatch_softmax_bwd(u: jax.Array, v: jax.Array, bias: jax.Array,
+                        log_q: jax.Array, lse: jax.Array, g: jax.Array,
+                        block_b: int = 256, block_c: int = 256):
+    """Blocked VJP of the in-batch CE -> (du, dv, dbias, dlogq)."""
+    return inbatch_softmax_bwd_pallas(u, v, bias, log_q, lse, g,
+                                      block_b, block_c,
+                                      interpret=not _on_tpu())

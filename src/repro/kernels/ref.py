@@ -66,6 +66,36 @@ def merge_serve_ref(cluster_scores: jax.Array, bias_lists: jax.Array,
         cluster_scores, bias_lists, lengths)
 
 
+def fused_gather_rank_ref(u: jax.Array, cluster_scores: jax.Array,
+                          starts: jax.Array, lengths: jax.Array,
+                          limits: jax.Array, bias_flat: jax.Array,
+                          ids_flat: jax.Array, emb_flat: jax.Array,
+                          chunk: int, target: int, l: int,
+                          exact: bool = True):
+    """Batched fused merge+gather+rank: vmapped lax.scan reference (the
+    pure-lax fallback ``core/retriever.fused_gather_rank`` dispatches
+    to).  Flat index arrays are closed over (shared by every query)."""
+    from repro.core import merge_sort   # lazy: avoid core <-> kernels cycle
+    return jax.vmap(lambda uu, cs, st, ln, lm:
+                    merge_sort.fused_gather_rank_lax(
+                        uu, cs, st, ln, lm, bias_flat, ids_flat, emb_flat,
+                        chunk, target, l, exact))(
+        u, cluster_scores, starts, lengths, limits)
+
+
+def ema_segment_sum_ref(v: jax.Array, assignment: jax.Array,
+                        weight: jax.Array, k: int
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Eq. 7-8 batch reductions: per-cluster weighted sums of the item
+    embeddings and of the weights.  v: (B, d), assignment: (B,) int,
+    weight: (B,) -> ((K, d) w_add, (K,) c_add)."""
+    v32 = v.astype(jnp.float32)
+    w32 = weight.astype(jnp.float32)
+    w_add = jax.ops.segment_sum(w32[:, None] * v32, assignment, k)
+    c_add = jax.ops.segment_sum(w32, assignment, k)
+    return w_add, c_add
+
+
 def index_sort_ref(cluster: jax.Array, bias: jax.Array) -> jax.Array:
     """Appendix-B index order: stable (cluster asc, bias desc) argsort.
 

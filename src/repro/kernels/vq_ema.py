@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: the train-step EMA codebook reductions (Eq. 7-9).
+
+``vq.ema_update`` needs two scatter-adds per streaming batch:
+
+    w_add[k] = sum_{j: a_j == k} weight_j * v_j        (K, d)
+    c_add[k] = sum_{j: a_j == k} weight_j              (K,)
+
+Scatter is the wrong shape for the TPU; the kernel instead streams the
+batch through VMEM in B-blocks, expands each block's assignment into a
+(bB, K) one-hot, and accumulates ``one_hot.T @ (weight * v)`` on the MXU
+into a (K, d) output block carried across grid steps — the standard
+segment-sum-as-matmul trick.  ``c_add`` rides along as a masked column
+reduction of the same one-hot.
+
+Summation ORDER differs from ``jax.ops.segment_sum`` (blocked matmul vs
+sequential scatter), so parity vs ``ref.ema_segment_sum_ref`` is
+allclose, not bitwise — same contract as the other reduction kernels.
+
+Padding rows carry assignment == K (one-hot all-zero) and weight 0, so
+they contribute nothing.  Like the rest of kernels/, this container
+validates in interpret mode only; the (bB, K) one-hot iota is built
+rank-2 for Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ema_segment_kernel(v_ref, a_ref, wt_ref, w_ref, c_ref,
+                        *, bb: int, k: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        w_ref[...] = jnp.zeros_like(w_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    v = v_ref[...].astype(jnp.float32)                   # (bB, d)
+    a = a_ref[...]                                       # (bB,)
+    wt = wt_ref[...].astype(jnp.float32)                 # (bB,)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (bb, k), 1)
+    onehot = (a[:, None] == iota_k)                      # (bB, K)
+    wv = wt[:, None] * v
+    w_ref[...] += jax.lax.dot_general(
+        onehot.astype(jnp.float32), wv, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (K, d) MXU
+    c_ref[...] += jnp.sum(jnp.where(onehot, wt[:, None], 0.0), axis=0)
+
+
+def ema_segment_sum_pallas(v: jax.Array, assignment: jax.Array,
+                           weight: jax.Array, k: int,
+                           block_b: int = 256, interpret: bool = True
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """v: (B, d), assignment: (B,), weight: (B,) -> ((K, d), (K,))."""
+    b, d = v.shape
+    pb = (-b) % block_b
+    if pb:
+        v = jnp.pad(v, ((0, pb), (0, 0)))
+        # padded rows: out-of-range cluster -> all-zero one-hot
+        assignment = jnp.pad(assignment, (0, pb), constant_values=k)
+        weight = jnp.pad(weight, (0, pb))
+    bp = b + pb
+
+    w_add, c_add = pl.pallas_call(
+        functools.partial(_ema_segment_kernel, bb=block_b, k=k),
+        grid=(bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(v, assignment.astype(jnp.int32), weight)
+    return w_add, c_add

@@ -408,12 +408,14 @@ def apply_deltas_sharded_batched(sidx: ShardedServingIndex,
     counts0 = np.asarray(sidx.counts)
     ids0 = np.asarray(sidx.item_ids)
     bias0 = np.asarray(sidx.item_bias)
-    ids, bias = ids0.copy(), bias0.copy()
+    emb0 = np.asarray(sidx.item_emb)
+    ids, bias, emb = ids0.copy(), bias0.copy(), emb0.copy()
     counts = counts0.copy()
     slots0 = np_hash_ids(ids0, store_capacity)
     oid = np.asarray(batch.old_id)
     nid = np.asarray(batch.new_id)
     b_bias = np.asarray(batch.bias)
+    b_emb = np.asarray(batch.emb)
     b_slot = np.asarray(batch.slot)
     bad_row, bad_cluster = None, -1
     for c in affected:
@@ -438,19 +440,24 @@ def apply_deltas_sharded_batched(sidx: ShardedServingIndex,
         ids_all = np.concatenate([seg_ids[keep], nid[ins]])
         bias_all = np.concatenate([bias0[d, start:start + n0][keep],
                                    b_bias[ins]])
+        emb_all = np.concatenate([emb0[d, start:start + n0][keep],
+                                  b_emb[ins]])
         slots_all = np.concatenate(
             [slots0[d, start:start + n0][keep], b_slot[ins]])
         order = _segment_order(ids_all, bias_all, slots_all)
         m = ids_all.shape[0]
         ids[d, start:start + m] = ids_all[order]
         bias[d, start:start + m] = bias_all[order]
+        emb[d, start:start + m] = emb_all[order]
         ids[d, start + m:start + cap] = -1
         bias[d, start + m:start + cap] = 0.0
+        emb[d, start + m:start + cap] = 0.0
         counts[d, lc] = m
     if bad_row is not None:
         raise SpareCapacityExceeded(bad_cluster)
     new = sidx._replace(item_ids=jnp.asarray(ids),
                         item_bias=jnp.asarray(bias),
+                        item_emb=jnp.asarray(emb),
                         counts=jnp.asarray(counts))
     if mesh is not None:
         from repro.serving.sharding import place_sharded_index
@@ -503,6 +510,7 @@ def apply_deltas_sharded_loop(sidx: ShardedServingIndex,
     ks = sidx.clusters_per_shard
     ids = np.array(sidx.item_ids)
     bias = np.array(sidx.item_bias)
+    emb = np.array(sidx.item_emb)
     offs = np.asarray(sidx.offsets)
     counts = np.array(sidx.counts)
     for i in range(batch.n):
@@ -511,17 +519,18 @@ def apply_deltas_sharded_loop(sidx: ShardedServingIndex,
         if oid >= 0 and 0 <= oc < n_clusters:
             d, lc = oc // ks, oc % ks
             counts[d, lc] = _segment_remove(
-                ids[d], bias[d], None, None, int(offs[d, lc]),
+                ids[d], bias[d], emb[d], None, int(offs[d, lc]),
                 int(counts[d, lc]), oid, n_clusters)
         if nid >= 0 and 0 <= nc < n_clusters:
             d, lc = nc // ks, nc % ks
             cap = int(offs[d, lc + 1] - offs[d, lc])
             counts[d, lc] = _segment_insert(
-                ids[d], bias[d], None, None, int(offs[d, lc]),
-                int(counts[d, lc]), cap, nid, float(batch.bias[i]), None,
-                int(batch.slot[i]), store_capacity, nc)
+                ids[d], bias[d], emb[d], None, int(offs[d, lc]),
+                int(counts[d, lc]), cap, nid, float(batch.bias[i]),
+                batch.emb[i], int(batch.slot[i]), store_capacity, nc)
     new = sidx._replace(item_ids=jnp.asarray(ids),
                         item_bias=jnp.asarray(bias),
+                        item_emb=jnp.asarray(emb),
                         counts=jnp.asarray(counts))
     if mesh is not None:
         from repro.serving.sharding import place_sharded_index

@@ -46,12 +46,16 @@ from repro.serving.telemetry import ServeStats
 class RetrievalService:
     def __init__(self, cfg: SVQConfig, params, index_state,
                  items_per_cluster: int = 256, use_kernel: bool = False,
+                 fused: bool = False,
                  n_shards: Optional[int] = None, mesh=None,
                  delta_spare: int = 0,
                  tracer: Optional[trace_lib.Tracer] = None):
         self.cfg = cfg
         self.items_per_cluster = items_per_cluster
         self.use_kernel = use_kernel
+        # fused=True serves through the slab-free merge+gather+rank
+        # stage (bit-identical candidates; adds exact_scores in-pass)
+        self.fused = fused
         self.n_shards = n_shards
         self.mesh = mesh
         # spare slots per cluster segment: the headroom incremental delta
@@ -83,7 +87,7 @@ class RetrievalService:
                 return sharding_lib.sharded_serve(
                     p, s, cfg, idx, b,
                     items_per_cluster=items_per_cluster, task=task,
-                    use_kernel=use_kernel, mesh=mesh)
+                    use_kernel=use_kernel, fused=fused, mesh=mesh)
 
             def _stage_rank(p, s, idx, b, task):
                 return sharding_lib.sharded_stage_rank(
@@ -93,7 +97,7 @@ class RetrievalService:
             def _stage_merge(idx, s1):
                 return sharding_lib.sharded_stage_merge(
                     cfg, idx, s1, items_per_cluster=items_per_cluster,
-                    use_kernel=use_kernel, mesh=mesh)
+                    use_kernel=use_kernel, fused=fused, mesh=mesh)
 
             def _stage_ranking(p, s1, s2, task):
                 return sharding_lib.sharded_stage_ranking(
@@ -103,7 +107,7 @@ class RetrievalService:
                 return retriever.serve(
                     p, s, cfg, idx, b,
                     items_per_cluster=items_per_cluster, task=task,
-                    use_kernel=use_kernel)
+                    use_kernel=use_kernel, fused=fused)
 
             def _stage_rank(p, s, idx, b, task):
                 del idx                        # uniform staged signature
@@ -113,7 +117,7 @@ class RetrievalService:
             def _stage_merge(idx, s1):
                 return retriever.serve_stage_merge(
                     cfg, idx, s1, items_per_cluster=items_per_cluster,
-                    use_kernel=use_kernel)
+                    use_kernel=use_kernel, fused=fused)
 
             def _stage_ranking(p, s1, s2, task):
                 return retriever.serve_stage_ranking(p, cfg, s1, s2,

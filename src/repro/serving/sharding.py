@@ -53,9 +53,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import SVQConfig
 from repro.core import assignment_store as astore
 from repro.core import merge_sort, ranking
-from repro.core.retriever import (IndexState, Params, item_features,
-                                  rank_codebook, serve_kernel,
-                                  user_features)
+from repro.core.retriever import (IndexState, Params, fused_gather_rank,
+                                  item_features, rank_codebook,
+                                  serve_kernel, user_features)
 from repro.models.dense import mlp
 from repro.obs import trace
 from repro.utils.sharding import constrain
@@ -69,13 +69,15 @@ class ShardedServingIndex(NamedTuple):
     Shard d's arrays hold its real items in [0, count_d) of the padded
     capacity; ``offsets[d]`` are shard-local segment starts for its Ks
     clusters; ``item_base[d]`` maps local back to global flat positions.
-    Only the serve-path payload (id + bias) is sharded: the ranking
-    step re-embeds candidates from the model tables, so the Appendix-B
-    embedding payload stays in the unsharded ServingIndex (a fused
-    slab-gather kernel would add it here — ROADMAP).
+    The full serve-path payload (id + bias + personality embedding) is
+    sharded: the fused gather+rank stage scores candidates against the
+    query from ``item_emb`` in-kernel, so each shard owns its items'
+    Appendix-B embedding rows too (the ranking step still re-embeds
+    final candidates from the model tables).
     """
     item_ids: jax.Array      # (D, cap) int32, -1 padded
     item_bias: jax.Array     # (D, cap) sorted desc within each segment
+    item_emb: jax.Array      # (D, cap, d) personality embeddings, 0 padded
     offsets: jax.Array       # (D, Ks+1) int32 shard-local segment starts
     item_base: jax.Array     # (D,) int32 global pos of shard's first item
     n_real: jax.Array        # () int32: global end of the sharded region
@@ -114,6 +116,7 @@ def shard_serving_index(index: astore.ServingIndex, n_clusters: int,
     offs = np.asarray(index.offsets)
     ids = np.asarray(index.item_ids)
     bias = np.asarray(index.item_bias)
+    emb = np.asarray(index.item_emb)
     live = np.asarray(index.counts)
     n_real = int(offs[n_clusters])
     # Every non-live slot (per-cluster spare capacity + the sentinel
@@ -123,8 +126,10 @@ def shard_serving_index(index: astore.ServingIndex, n_clusters: int,
     for c in range(n_clusters):
         live_mask[offs[c]:offs[c] + live[c]] = True
     if not ((ids[~live_mask] == -1).all()
-            and (bias[~live_mask] == 0.0).all()):
-        raise ValueError("non-live slots are not constant (-1 id, 0 bias)")
+            and (bias[~live_mask] == 0.0).all()
+            and (emb[~live_mask] == 0.0).all()):
+        raise ValueError("non-live slots are not constant "
+                         "(-1 id, 0 bias, 0 emb)")
 
     base = offs[np.arange(n_shards) * ks].astype(np.int32)
     ends = offs[(np.arange(n_shards) + 1) * ks].astype(np.int32)
@@ -133,16 +138,18 @@ def shard_serving_index(index: astore.ServingIndex, n_clusters: int,
 
     s_ids = np.full((n_shards, cap), -1, np.int32)
     s_bias = np.zeros((n_shards, cap), bias.dtype)
+    s_emb = np.zeros((n_shards, cap, emb.shape[1]), emb.dtype)
     s_offs = np.zeros((n_shards, ks + 1), np.int32)
     s_cnts = np.zeros((n_shards, ks), np.int32)
     for d in range(n_shards):
         lo, hi = int(base[d]), int(ends[d])
         s_ids[d, :hi - lo] = ids[lo:hi]
         s_bias[d, :hi - lo] = bias[lo:hi]
+        s_emb[d, :hi - lo] = emb[lo:hi]
         s_offs[d] = offs[d * ks:(d + 1) * ks + 1] - base[d]
         s_cnts[d] = live[d * ks:(d + 1) * ks]
     return ShardedServingIndex(
-        item_ids=jnp.asarray(s_ids),
+        item_ids=jnp.asarray(s_ids), item_emb=jnp.asarray(s_emb),
         item_bias=jnp.asarray(s_bias), offsets=jnp.asarray(s_offs),
         item_base=jnp.asarray(base),
         n_real=jnp.int32(n_real), n_items=jnp.int32(index.n_items),
@@ -161,6 +168,7 @@ def place_sharded_index(sidx: ShardedServingIndex, mesh: Mesh,
 
     return ShardedServingIndex(
         item_ids=put(sidx.item_ids, P(axis, None)),
+        item_emb=put(sidx.item_emb, P(axis, None, None)),
         item_bias=put(sidx.item_bias, P(axis, None)),
         offsets=put(sidx.offsets, P(axis, None)),
         item_base=put(sidx.item_base, P()),       # replicated: routing table
@@ -212,7 +220,7 @@ def sharded_stage_rank(params: Params, state: IndexState, cfg: SVQConfig,
     top_clusters = jnp.take_along_axis(gids, sel, axis=1)        # (B, C)
     top_scores = constrain(top_scores, mesh, P(SHARD_AXIS, None))
     top_clusters = constrain(top_clusters, mesh, P(SHARD_AXIS, None))
-    return dict(user_feat=user_feat, hist_emb=hist_emb,
+    return dict(user_feat=user_feat, hist_emb=hist_emb, u=u,
                 top_scores=top_scores, top_clusters=top_clusters)
 
 
@@ -220,9 +228,19 @@ def sharded_stage_merge(cfg: SVQConfig, sidx: ShardedServingIndex,
                         s1: Dict[str, jax.Array],
                         items_per_cluster: int = 256,
                         use_kernel: bool = False,
+                        fused: bool = False,
                         mesh: Optional[Mesh] = None
                         ) -> Dict[str, jax.Array]:
-    """Stages 3-4a: routed slab fetch + Alg. 1 merge + payload gather."""
+    """Stages 3-4a: routed slab fetch + Alg. 1 merge + payload gather.
+
+    ``fused=True`` drops the (B, C, L) bias-slab materialization: the
+    merge consumes flattened shard-local addresses (``owner * cap +
+    local``) whose per-lane clamp reproduces the slab path's ``cap - 1``
+    clamp bit-exactly, and the exact Eq. 11 score is computed in the
+    same pass from the sharded embedding payload.  Candidate ids are
+    still routed OUTSIDE the kernel (searchsorted over ``item_base``),
+    so the sentinel-tail synthesis stays byte-for-byte the slab path's.
+    """
     D = sidx.n_shards
     ks = sidx.clusters_per_shard
     cap = sidx.capacity
@@ -235,11 +253,35 @@ def sharded_stage_merge(cfg: SVQConfig, sidx: ShardedServingIndex,
     lstart = sidx.offsets[owner, local_c]
     counts = sidx.counts[owner, local_c]      # live prefix (tombstone-aware)
     ar = jnp.arange(L, dtype=jnp.int32)
+    lengths = jnp.minimum(counts, L)
+    S = cfg.candidates_out
+
+    if fused:
+        # flattened (D * cap) addressing: min(owner*cap + local + i,
+        # owner*cap + cap-1) == the slab path's local ``cap - 1`` clamp
+        starts = owner * cap + lstart                            # (B, C)
+        limits = owner * cap + (cap - 1)
+        with trace.annotate("fused_gather_rank"):
+            pos, msort_scores, _, exact_scores = fused_gather_rank(
+                s1["u"], top_scores, starts, lengths, limits,
+                sidx.item_bias.reshape(-1), sidx.item_ids.reshape(-1),
+                sidx.item_emb.reshape(-1, sidx.item_emb.shape[-1]),
+                cfg.chunk_size, S, L, use_kernel=use_kernel)
+        valid = pos >= 0
+        c_idx = jnp.clip(pos, 0) // L
+        i_idx = jnp.clip(pos, 0) % L
+        owner_s = jnp.take_along_axis(owner, c_idx, axis=1)
+        lstart_s = jnp.take_along_axis(lstart, c_idx, axis=1)
+        flat = jnp.minimum(sidx.item_base[owner_s] + lstart_s + i_idx,
+                           sidx.n_items - 1)
+        cand_ids = _route_candidate_ids(sidx, flat, D, cap)
+        return dict(cand_ids=cand_ids, valid=valid,
+                    merge_scores=msort_scores, exact_scores=exact_scores)
+
     # global flat positions, identical (incl. the n-1 clamp) to the
     # single-device ``starts[..., None] + arange`` slab
     slab = jnp.minimum(sidx.item_base[owner][..., None]
                        + lstart[..., None] + ar, sidx.n_items - 1)
-    lengths = jnp.minimum(counts, L)
     # bias values come from the owning shard's local arrays; lanes past
     # ``lengths`` are padding garbage in BOTH paths and both merge
     # implementations mask them, so outputs stay bit-exact
@@ -248,7 +290,6 @@ def sharded_stage_merge(cfg: SVQConfig, sidx: ShardedServingIndex,
     bias = constrain(bias, mesh, P(SHARD_AXIS, None, None))
 
     # ---- stage 4a: Alg. 1 merge (batch-parallel) -----------------------
-    S = cfg.candidates_out
     with trace.annotate("merge_serve"):
         pos, msort_scores = serve_kernel(top_scores, bias, lengths,
                                          cfg.chunk_size, S,
@@ -260,16 +301,33 @@ def sharded_stage_merge(cfg: SVQConfig, sidx: ShardedServingIndex,
         slab.reshape(slab.shape[0], -1),
         (c_idx * L + i_idx).astype(jnp.int32), axis=1)           # (B, S)
 
-    # route every flat position back to its owning shard; sentinel-tail
-    # positions (>= n_real) synthesize the constant empty-slot payload
+    cand_ids = _route_candidate_ids(sidx, flat, D, cap)
+    # exact Eq. 11 candidate score from the sharded payload — what the
+    # fused path computes in-kernel
+    fowner = jnp.clip(
+        jnp.searchsorted(sidx.item_base, flat, side="right") - 1, 0, D - 1)
+    flocal = jnp.clip(flat - sidx.item_base[fowner], 0, cap - 1)
+    exact_scores = jnp.where(
+        valid,
+        jnp.einsum("bsd,bd->bs",
+                   sidx.item_emb[fowner, flocal].astype(jnp.float32),
+                   s1["u"].astype(jnp.float32))
+        + sidx.item_bias[fowner, flocal].astype(jnp.float32),
+        merge_sort.NEG)
+    return dict(cand_ids=cand_ids, valid=valid,
+                merge_scores=msort_scores, exact_scores=exact_scores)
+
+
+def _route_candidate_ids(sidx: ShardedServingIndex, flat: jax.Array,
+                         D: int, cap: int) -> jax.Array:
+    """Route global flat positions back to their owning shard; sentinel
+    tail positions (>= n_real) synthesize the constant empty-slot id."""
     fowner = jnp.clip(
         jnp.searchsorted(sidx.item_base, flat, side="right") - 1, 0, D - 1)
     flocal = jnp.clip(flat - sidx.item_base[fowner], 0, cap - 1)
     in_tail = flat >= sidx.n_real
-    cand_ids = jnp.where(in_tail, jnp.int32(-1),
-                         sidx.item_ids[fowner, flocal])
-    return dict(cand_ids=cand_ids, valid=valid,
-                merge_scores=msort_scores)
+    return jnp.where(in_tail, jnp.int32(-1),
+                     sidx.item_ids[fowner, flocal])
 
 
 def sharded_stage_ranking(params: Params, cfg: SVQConfig,
@@ -303,6 +361,7 @@ def sharded_stage_ranking(params: Params, cfg: SVQConfig,
         item_ids=jnp.take_along_axis(cand_ids, order, axis=1),
         scores=jnp.take_along_axis(rscores, order, axis=1),
         merge_scores=s2["merge_scores"],
+        exact_scores=s2["exact_scores"],
         index_ids=cand_ids,
         valid=jnp.take_along_axis(valid, order, axis=1))
 
@@ -310,16 +369,17 @@ def sharded_stage_ranking(params: Params, cfg: SVQConfig,
 def sharded_serve(params: Params, state: IndexState, cfg: SVQConfig,
                   sidx: ShardedServingIndex, batch: Dict[str, jax.Array],
                   items_per_cluster: int = 256, task: int = 0,
-                  use_kernel: bool = False,
+                  use_kernel: bool = False, fused: bool = False,
                   mesh: Optional[Mesh] = None) -> Dict[str, jax.Array]:
     """Distributed two-step retrieval, bit-exact vs ``retriever.serve``.
 
     Composes the three stage functions (rank -> merge -> ranking); under
-    one jit this traces exactly the pre-split op sequence.
+    one jit this traces exactly the pre-split op sequence.  ``fused``
+    selects the slab-free merge+gather+rank stage.
     """
     s1 = sharded_stage_rank(params, state, cfg, sidx, batch, task=task,
                             use_kernel=use_kernel, mesh=mesh)
     s2 = sharded_stage_merge(cfg, sidx, s1,
                              items_per_cluster=items_per_cluster,
-                             use_kernel=use_kernel, mesh=mesh)
+                             use_kernel=use_kernel, fused=fused, mesh=mesh)
     return sharded_stage_ranking(params, cfg, s1, s2, task=task, mesh=mesh)

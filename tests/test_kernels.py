@@ -113,6 +113,135 @@ def test_cluster_rank_sweep(rng, b, k, d, n, bb, bk):
     np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
 
 
+@pytest.mark.parametrize("b,c,l,chunk,target", [
+    (3, 6, 10, 4, 25), (2, 13, 17, 3, 70), (1, 5, 3, 8, 9),
+    (4, 7, 32, 16, 100),              # chunk wider than some lists
+])
+def test_merge_serve_ds_sweep(rng, b, c, l, chunk, target):
+    """pl.ds pop-loop variant == masked-scan kernel == lax oracle."""
+    cs = jnp.asarray(rng.normal(size=(b, c)).astype(np.float32))
+    bl = jnp.asarray(-np.sort(
+        -rng.normal(size=(b, c, l)).astype(np.float32), axis=-1))
+    ln = jnp.asarray(rng.integers(0, l + 1, size=(b, c)).astype(np.int32))
+    pos_d, sc_d = ops.merge_serve_ds(cs, bl, ln, chunk, target)
+    pos_r, sc_r = ref.merge_serve_ref(cs, bl, ln, chunk, target)
+    np.testing.assert_array_equal(np.asarray(pos_d), np.asarray(pos_r))
+    np.testing.assert_array_equal(np.asarray(sc_d), np.asarray(sc_r))
+    pos_k, sc_k = ops.merge_serve(cs, bl, ln, chunk, target)
+    np.testing.assert_array_equal(np.asarray(pos_d), np.asarray(pos_k))
+    np.testing.assert_array_equal(np.asarray(sc_d), np.asarray(sc_k))
+
+
+def test_merge_serve_ds_tied_scores(rng):
+    """Integer-valued biases force heavy cross-cluster score ties; the
+    ds variant must pop in the exact same order as the masked scan."""
+    for seed in range(4):
+        r = np.random.default_rng(seed)
+        c, l = 9, 12
+        cs = jnp.asarray(r.integers(0, 2, (2, c)).astype(np.float32))
+        bl = jnp.asarray(-np.sort(
+            -r.integers(0, 3, (2, c, l)).astype(np.float32), axis=-1))
+        ln = jnp.asarray(r.integers(0, l + 1, (2, c)).astype(np.int32))
+        pos_d, sc_d = ops.merge_serve_ds(cs, bl, ln, 4, 30)
+        pos_r, sc_r = ref.merge_serve_ref(cs, bl, ln, 4, 30)
+        np.testing.assert_array_equal(np.asarray(pos_d), np.asarray(pos_r))
+        np.testing.assert_array_equal(np.asarray(sc_d), np.asarray(sc_r))
+
+
+# ---------------------------------------------------------------------------
+# ema_segment_sum: train-step EMA batch reductions (Eq. 7-8)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,k,d,bb", [
+    (64, 16, 8, 32), (100, 37, 24, 32),    # non-divisible -> padding path
+    (17, 5, 16, 8), (256, 64, 32, 256),    # single-block batch
+])
+def test_ema_segment_sum_sweep(rng, b, k, d, bb):
+    v = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    # assignment == k marks padding rows that must contribute NOTHING
+    a = jnp.asarray(rng.integers(0, k + 1, b).astype(np.int32))
+    w = jnp.asarray(rng.uniform(0.0, 2.0, b).astype(np.float32))
+    w_k, c_k = ops.ema_segment_sum(v, a, w, k, block_b=bb)
+    w_r, c_r = ref.ema_segment_sum_ref(v, a, w, k)
+    np.testing.assert_allclose(np.asarray(w_k), np.asarray(w_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ema_segment_sum_all_padding(rng):
+    """A batch of only padding rows reduces to exact zeros."""
+    b, k, d = 24, 8, 4
+    v = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    a = jnp.full((b,), k, jnp.int32)
+    w = jnp.ones((b,), jnp.float32)
+    w_k, c_k = ops.ema_segment_sum(v, a, w, k)
+    assert float(jnp.abs(w_k).max()) == 0.0
+    assert float(jnp.abs(c_k).max()) == 0.0
+
+
+def test_ema_update_kernel_dispatch(rng):
+    """vq.ema_update(use_kernel=True) matches the segment_sum path."""
+    from repro.core import vq
+    state = vq.init_vq(jax.random.PRNGKey(0), 32, 8)
+    b = 40
+    v = jnp.asarray(rng.normal(size=(b, 8)).astype(np.float32))
+    a = jnp.asarray(rng.integers(0, 33, b).astype(np.int32))
+    w = jnp.asarray(rng.uniform(0.0, 1.0, b).astype(np.float32))
+    ref_s = vq.ema_update(state, v, a, w, 0.9, use_kernel=False)
+    ker_s = vq.ema_update(state, v, a, w, 0.9, use_kernel=True)
+    for fa, fb, name in zip(ref_s, ker_s, ref_s._fields):
+        np.testing.assert_allclose(np.asarray(fa), np.asarray(fb),
+                                   rtol=1e-5, atol=1e-6, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# flash-style in-batch softmax backward vs the autodiff VJP of the
+# dense (B, B)-materializing reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,d,bb,bc", [
+    (64, 16, 32, 32), (45, 20, 16, 16),    # non-pow2 -> padding path
+    (96, 24, 256, 256), (7, 8, 4, 4),      # batch smaller than block
+])
+def test_inbatch_softmax_bwd_vjp_parity(rng, b, d, bb, bc):
+    u = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    bias = jnp.asarray(rng.normal(size=(b,)).astype(np.float32))
+    lq = jnp.asarray(rng.normal(size=(b,)).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=(b,)).astype(np.float32))
+    _, vjp = jax.vjp(lambda *a: ref.inbatch_softmax_ref(*a),
+                     u, v, bias, lq)
+    want = vjp(g)
+    _, m, l = ops.inbatch_softmax_stats(u, v, bias, lq,
+                                        block_b=bb, block_c=bc)
+    got = ops.inbatch_softmax_bwd(u, v, bias, lq, m + jnp.log(l), g,
+                                  block_b=bb, block_c=bc)
+    for a, b_, name in zip(got, want, ("du", "dv", "dbias", "dlogq")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-4, atol=1e-5, err_msg=name)
+
+
+def test_ce_rows_kernel_grads_match_reference(rng):
+    """The losses-layer custom_vjp (flash bwd) == autodiff of the dense
+    reference rows, through a sum-with-weights contraction."""
+    from repro.core import losses
+    b, d = 52, 12
+    u = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    bias = jnp.asarray(rng.normal(size=(b,)).astype(np.float32))
+    lq = jnp.asarray(rng.normal(size=(b,)).astype(np.float32))
+    wgt = jnp.asarray(rng.uniform(0.0, 1.0, b).astype(np.float32))
+    f_ref = lambda *a: jnp.sum(wgt * losses._ce_rows_ref(*a, lq))
+    f_ker = lambda *a: jnp.sum(wgt * losses._ce_rows_kernel(*a, lq))
+    vr, gr = jax.value_and_grad(f_ref, argnums=(0, 1, 2))(u, v, bias)
+    vk, gk = jax.value_and_grad(f_ker, argnums=(0, 1, 2))(u, v, bias)
+    np.testing.assert_allclose(float(vk), float(vr), rtol=1e-5)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-4, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # dtype sweep: every kernel vs its oracle at f32/bf16, non-pow2 shapes
 # ---------------------------------------------------------------------------
