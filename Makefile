@@ -1,5 +1,6 @@
 # Repo entry points (tier-1 verify + benchmarks).
-.PHONY: test test-fast lint bench bench-serving bench-freshness bench-obs
+.PHONY: test test-fast lint bench bench-serving bench-freshness bench-obs \
+	bench-quality
 
 test:           ## full tier-1 suite incl. multi-device tier (what CI runs)
 	./scripts/test.sh
@@ -19,6 +20,9 @@ bench-freshness: ## index-immediacy freshness table (BENCH_freshness.json)
 
 bench-obs:      ## observability overhead table (BENCH_observability.json)
 	PYTHONPATH=src python -m benchmarks.run --only observability
+
+bench-quality:  ## probe-observed drift recovery + SLO closed loop (BENCH_quality.json)
+	PYTHONPATH=src python -m benchmarks.run --only quality
 
 lint:           ## ruff when installed, else a compileall syntax gate
 	./scripts/lint.sh

@@ -36,6 +36,11 @@ Results land in ``BENCH_observability.json``:
   rows.traced_request          fused vs staged mean (ms), overhead_x,
                                spans recorded per traced request
   rows.scrape                  scrapes completed during the run, mean ms
+  rows.probe_overhead          shadow quality probes (obs/quality.py)
+                               off vs on, same paired per-round p50/p99
+                               protocol; the async oracle thread must
+                               not move the serve tail even while
+                               probes are being scored (within_5pct)
   rows.apply_deltas            loop vs vectorized us/batch, speedup_x,
                                parity (bit-equal final index)
 """
@@ -59,6 +64,8 @@ OUT_JSON = out_json("BENCH_observability.json")
 ROUNDS = sz(10, 2)              # interleaved rounds per phase
 CALLS_PER_ROUND = sz(40, 8)
 SAMPLE_EVERY = 256              # production-style trace sampling
+PROBE_SAMPLE_EVERY = sz(64, 4)  # production-style probe sampling
+PROBE_K = 20
 BATCH_ROWS = 32
 DELTA_BATCHES = sz(50, 6)
 DELTA_ROWS = sz(1024, 128)      # one train step's writes (= batch size)
@@ -143,6 +150,51 @@ def _bench_serve(tr, batch):
     )
 
 
+def _bench_probe_overhead(tr, batch):
+    """Shadow-probe cost on the serve path: probes off vs on, paired
+    per-round p99 inflation (same protocol as the tracing phases).  The
+    oracle re-scoring runs on the prober's worker thread; what this
+    measures is the residual hot-path cost — the sampled submit (host
+    array copies + enqueue) plus any lock shadow the async oracle casts
+    over concurrent serves."""
+    cfg = tr.cfg
+    svc_off = RetrievalService(cfg, tr.params, tr.index)
+    svc_on = RetrievalService(cfg, tr.params, tr.index)
+    svc_on.enable_probes(k=PROBE_K, sample_every=PROBE_SAMPLE_EVERY)
+    svc_off.serve_batch(batch)                   # warm both jit paths
+    svc_on.serve_batch(batch)
+    assert svc_on.prober.drain(120.0)            # warm the oracle jit
+    rounds_off, rounds_on = [], []
+    for _ in range(ROUNDS):                      # interleave phases
+        r_off, r_on = [], []
+        _serve_loop(svc_off, batch, CALLS_PER_ROUND, r_off)
+        _serve_loop(svc_on, batch, CALLS_PER_ROUND, r_on)
+        rounds_off.append(r_off)
+        rounds_on.append(r_on)
+    assert svc_on.prober.drain(120.0)
+    snap = svc_on.prober.snapshot()
+    svc_on.disable_probes()
+    lat_off = [x for r in rounds_off for x in r]
+    lat_on = [x for r in rounds_on for x in r]
+    per_round = [(_p(on, 99) - _p(off, 99)) / _p(off, 99) * 100.0
+                 for off, on in zip(rounds_off, rounds_on)]
+    inflation = float(np.median(per_round))
+    return dict(
+        serve_p50=dict(disabled_ms=round(_p(lat_off, 50), 4),
+                       probes_ms=round(_p(lat_on, 50), 4)),
+        serve_p99=dict(disabled_ms=round(_p(lat_off, 99), 4),
+                       probes_ms=round(_p(lat_on, 99), 4),
+                       inflation_pct=round(inflation, 2),
+                       round_inflations_pct=[round(x, 2)
+                                             for x in per_round],
+                       within_5pct=bool(inflation <= 5.0)),
+        sample_every=PROBE_SAMPLE_EVERY,
+        probes_scored=snap["n_scored"],
+        probes_dropped=snap["n_dropped"],
+        probe_errors=snap["n_errors"],
+        probe_recall=round(snap["recall"]["mean"], 4))
+
+
 def _bench_apply_deltas(tr):
     cfg = tr.cfg
     store = tr.index.store
@@ -196,6 +248,7 @@ def run() -> list:
                             n_clusters=tr.cfg.n_clusters),
               "rows": {}}
     record["rows"].update(_bench_serve(tr, batch))
+    record["rows"]["probe_overhead"] = _bench_probe_overhead(tr, batch)
     record["rows"]["apply_deltas"] = _bench_apply_deltas(tr)
     with open(OUT_JSON, "w") as f:
         json.dump(record, f, indent=2, sort_keys=True)
@@ -212,6 +265,10 @@ def run() -> list:
          f"({r['traced_request']['spans']} spans)"),
         ("obs/scrape_mean", None, f"{r['scrape']['mean_ms']}ms "
          f"({r['scrape']['series']} series)"),
+        ("obs/probe_p99_inflation", None,
+         f"{r['probe_overhead']['serve_p99']['inflation_pct']}% "
+         f"(within_5pct={r['probe_overhead']['serve_p99']['within_5pct']}, "
+         f"scored={r['probe_overhead']['probes_scored']})"),
         ("obs/apply_deltas_loop", r["apply_deltas"]["loop_us"],
          "us/batch"),
         ("obs/apply_deltas_vectorized", r["apply_deltas"]["vectorized_us"],

@@ -1,0 +1,270 @@
+"""Quality-observability benchmark — drift recovery + the closed loop.
+
+Everything here is measured BY THE SHADOW PROBES themselves
+(``obs/quality.py``): the point is not just that immediate publication
+is fresher than deferred (bench_freshness.py shows that in seconds),
+but that the live quality instrumentation *sees* the difference as it
+happens, and that an SLO burn on the probe gauge can drive the service
+back to health with no human in the loop.
+
+Two experiments over one base retriever:
+
+  drift recovery    the ``data/streaming.py`` topic rotation drifts the
+                    corpus while ``launch.train_svq_live`` keeps
+                    training against a live service, publishing every
+                    step's (re)assignment deltas immediately (spare-
+                    capacity path) vs deferred (rebuild-cadence
+                    baseline, one rebuild every few rounds).  Per round
+                    we record the probes' windowed Recall@K and score
+                    gap: the immediate curve should hold recall through
+                    the drift, the deferred curve should sag between
+                    rebuilds and snap back at each publication.
+
+  closed loop       a mass deferred reassignment makes the live index
+                    stale -> the probe Recall@K gauge collapses -> the
+                    SLO engine's recall-floor objective burns in both
+                    windows -> the alert fires -> the service's
+                    auto-repair hook answers with the forced-compaction
+                    rebuild -> the gauge recovers above objective and
+                    the alert resolves.  All transitions recorded from
+                    the engine's typed alert log.
+
+Results land in ``BENCH_quality.json``:
+
+  backend, device_count           jax platform of the run
+  shape                           rounds / steps / drift rate / probe k
+  rows.drift_recovery.immediate   per-round recall + score-gap curves
+  rows.drift_recovery.deferred    (same, with rebuild_rounds marked)
+  rows.drift_recovery.immediate_recovers_faster
+                                  mean immediate recall > mean deferred
+                                  recall over the drift window
+  rows.closed_loop                recall before / during / after burn,
+                                  objective, alert sequence
+                                  (firing -> resolved), auto_repairs
+  rows.closed_loop.repair_restores_recall
+                                  gauge back above objective after the
+                                  alert-driven rebuild
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_cfg, out_json, sz
+from repro.core import assignment_store as astore
+from repro.data import RecsysStream, StreamConfig
+from repro.launch.train import train_svq, train_svq_live
+from repro.obs.slo import SLOEngine, SLOSpec
+from repro.serving import RetrievalService, extract_deltas
+
+OUT_JSON = out_json("BENCH_quality.json")
+
+BASE_STEPS = sz(150, 8)        # base training before the live phases
+TRAIN_BATCH = sz(128, 32)
+N_ROUNDS = sz(8, 3)            # live rounds per publication mode
+CHUNK_STEPS = sz(10, 2)        # train steps per round
+REBUILD_EVERY = 4              # deferred publication cadence (rounds)
+DRIFT_RATE = 0.02              # radians/step of topic rotation
+PROBE_K = sz(20, 8)
+PROBE_USERS = 32
+PROBE_SERVES = sz(3, 1)        # probe serves per round
+DELTA_SPARE = 64
+
+
+def _drift_stream(cfg):
+    """A fresh drifting stream; same seed -> both modes replay the SAME
+    impression/candidate/drift sequence."""
+    return RecsysStream(StreamConfig(
+        n_items=cfg.n_items, n_users=cfg.n_users,
+        hist_len=cfg.user_hist_len, label_noise=0.5,
+        drift_rate=DRIFT_RATE, seed=0))
+
+
+def _probe_batch(cfg, stream):
+    users = np.arange(PROBE_USERS) % cfg.n_users
+    return dict(user_id=users.astype(np.int32),
+                hist=stream.user_hist[users].astype(np.int32))
+
+
+def _probe_round(svc, batch):
+    """Serve the probe traffic, wait for the shadow scores, and read the
+    round's windowed estimates (window == rows/round, so each round's
+    snapshot reflects only that round's probes)."""
+    for _ in range(PROBE_SERVES):
+        svc.serve_batch(batch)
+    assert svc.prober.drain(120.0)
+    recall = svc.prober.recall.snapshot()
+    gap = svc.prober.score_gap.snapshot()
+    return dict(recall=round(recall["mean"], 4),
+                recall_ci=[round(recall["ci_low"], 4),
+                           round(recall["ci_high"], 4)],
+                score_gap=round(gap["mean"], 4),
+                n=recall["n"])
+
+
+def _run_mode(cfg, params, index, immediate: bool):
+    """One publication mode's live drift run -> per-round curve."""
+    stream = _drift_stream(cfg)
+    svc = RetrievalService(cfg, params, index, delta_spare=DELTA_SPARE)
+    svc.enable_probes(k=PROBE_K, sample_every=1,
+                      window=PROBE_SERVES * PROBE_USERS)
+    batch = _probe_batch(cfg, stream)
+    svc.serve_batch(batch)                 # compile before measuring
+    assert svc.prober.drain(120.0)
+    p, s = params, index
+    curve, rebuild_rounds = [], []
+    t0 = time.perf_counter()
+    for r in range(N_ROUNDS):
+        p, s, _ = train_svq_live(cfg, stream, svc, p, s,
+                                 n_steps=CHUNK_STEPS, batch=TRAIN_BATCH,
+                                 immediate=immediate)
+        if not immediate and (r + 1) % REBUILD_EVERY == 0:
+            svc.rebuild_index()            # the deferred publication
+            rebuild_rounds.append(r)
+        curve.append(_probe_round(svc, batch))
+    wall_s = time.perf_counter() - t0
+    snap = svc.prober.snapshot()
+    svc.disable_probes()
+    return dict(
+        curve=curve,
+        rebuild_rounds=rebuild_rounds,
+        mean_recall=round(float(np.mean([c["recall"] for c in curve])), 4),
+        final_recall=curve[-1]["recall"],
+        probes_scored=snap["n_scored"],
+        probe_errors=snap["n_errors"],
+        delta_applies=svc.stats.delta_applies,
+        delta_compactions=svc.stats.delta_compactions,
+        rebuilds=svc.stats.index_rebuilds,
+        wall_s=round(wall_s, 2))
+
+
+def _closed_loop(cfg, params, index):
+    """Induced recall burn -> alert -> auto-repair -> recovery."""
+    stream = _drift_stream(cfg)
+    svc = RetrievalService(cfg, params, index, delta_spare=DELTA_SPARE)
+    reg = svc.register_metrics()
+    phase_rows = PROBE_SERVES * PROBE_USERS
+    svc.enable_probes(k=PROBE_K, sample_every=1, window=phase_rows,
+                      registry=reg)
+    batch = _probe_batch(cfg, stream)
+
+    # healthy phase: establish the baseline gauge
+    before = _probe_round(svc, batch)["recall"]
+    objective = max(0.05, round(0.75 * before, 4))
+    eng = SLOEngine(reg, [SLOSpec(
+        "probe_recall_floor", "svq_probe_recall", objective, op="ge",
+        windows=(0.5, 1.0),
+        description="closed-loop recall floor (0.75x healthy baseline)")])
+    svc.attach_auto_repair(eng, slos=["probe_recall_floor"],
+                           cooldown_s=0.0)
+    eng.evaluate(now=0.0)
+    assert eng.burning() == []
+
+    # induce the burn: a mass DEFERRED identity permutation — every
+    # valid item takes over another item's (cluster, embedding, bias)
+    # triple.  The store stays perfectly self-consistent (a rebuild
+    # restores baseline recall exactly), but the oracle's top-k ids are
+    # permuted while the stale live index keeps serving the old ids.
+    rng = np.random.default_rng(11)
+    prev = svc.store_snapshot()
+    slots = np.flatnonzero(np.asarray(prev.cluster) >= 0)
+    perm = rng.permutation(len(slots))
+    ids = np.asarray(prev.item_id)[slots]
+    src = slots[perm]
+    moved = astore.write(
+        prev, jnp.asarray(ids),
+        prev.cluster[src], prev.item_emb[src], prev.item_bias[src])
+    svc.apply_deltas(extract_deltas(prev, moved, jnp.asarray(ids)),
+                     immediate=False)
+    during = _probe_round(svc, batch)["recall"]
+
+    # the engine sees the collapsed gauge in both windows -> the alert
+    # fires -> the attached repair listener runs the forced-compaction
+    # rebuild SYNCHRONOUSLY inside this evaluate call
+    rebuilds0 = svc.stats.index_rebuilds
+    eng.evaluate(now=10.0)
+    fired = eng.burning() == ["probe_recall_floor"]
+    repaired = (svc.stats.auto_repairs == 1
+                and svc.stats.index_rebuilds == rebuilds0 + 1)
+
+    # post-repair probes: the rebuilt index reflects the moved store
+    after = _probe_round(svc, batch)["recall"]
+    eng.evaluate(now=40.0)                 # burn aged out of both windows
+    resolved = eng.burning() == []
+    alerts = eng.alerts()
+    svc.disable_probes()
+    return dict(
+        recall_before=before, objective=objective,
+        recall_during_burn=during, recall_after_repair=after,
+        alert_fired=bool(fired), auto_repairs=svc.stats.auto_repairs,
+        repair_ran_rebuild=bool(repaired),
+        alert_resolved=bool(resolved),
+        alert_states=[a["state"] for a in alerts],
+        burn_below_objective=bool(during < objective),
+        repair_restores_recall=bool(after >= objective))
+
+
+def run() -> list:
+    cfg = bench_cfg()
+    stream = _drift_stream(cfg)
+    params, index, _ = train_svq(cfg, stream, BASE_STEPS, TRAIN_BATCH)
+
+    record = {"backend": jax.default_backend(),
+              "device_count": jax.device_count(),
+              "shape": dict(base_steps=BASE_STEPS, rounds=N_ROUNDS,
+                            chunk_steps=CHUNK_STEPS,
+                            train_batch=TRAIN_BATCH,
+                            rebuild_every=REBUILD_EVERY,
+                            drift_rate=DRIFT_RATE, probe_k=PROBE_K,
+                            probe_users=PROBE_USERS,
+                            delta_spare=DELTA_SPARE,
+                            n_items=cfg.n_items,
+                            n_clusters=cfg.n_clusters),
+              "rows": {}}
+    rows = []
+
+    imm = _run_mode(cfg, params, index, immediate=True)
+    dfr = _run_mode(cfg, params, index, immediate=False)
+    faster = imm["mean_recall"] > dfr["mean_recall"]
+    record["rows"]["drift_recovery"] = dict(
+        immediate=imm, deferred=dfr,
+        immediate_recovers_faster=bool(faster))
+    rows.append(("quality/immediate",
+                 None,
+                 f"mean recall@{PROBE_K}={imm['mean_recall']:.3f} "
+                 f"final={imm['final_recall']:.3f} "
+                 f"applies={imm['delta_applies']}"))
+    rows.append(("quality/deferred",
+                 None,
+                 f"mean recall@{PROBE_K}={dfr['mean_recall']:.3f} "
+                 f"final={dfr['final_recall']:.3f} "
+                 f"rebuild_rounds={dfr['rebuild_rounds']}"))
+    rows.append(("quality/immediate_recovers_faster", None, bool(faster)))
+
+    loop = _closed_loop(cfg, params, index)
+    record["rows"]["closed_loop"] = loop
+    rows.append(("quality/closed_loop",
+                 None,
+                 f"recall {loop['recall_before']:.3f} -> "
+                 f"{loop['recall_during_burn']:.3f} (burn) -> "
+                 f"{loop['recall_after_repair']:.3f} "
+                 f"(objective {loop['objective']:.3f}, "
+                 f"repairs={loop['auto_repairs']})"))
+    rows.append(("quality/alert_fired_and_resolved", None,
+                 bool(loop["alert_fired"] and loop["alert_resolved"])))
+    rows.append(("quality/repair_restores_recall", None,
+                 bool(loop["repair_restores_recall"])))
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

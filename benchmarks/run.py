@@ -20,6 +20,7 @@ MODULES = [
     ("serving", "benchmarks.bench_serving"),          # §3.4 / Appendix B
     ("freshness", "benchmarks.bench_freshness"),      # §3.1 immediacy
     ("observability", "benchmarks.bench_observability"),  # obs overhead
+    ("quality", "benchmarks.bench_quality"),          # probes + SLO loop
 ]
 
 

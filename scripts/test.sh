@@ -18,9 +18,10 @@
 #                   double-buffer swaps, and incremental deltas over
 #                   the ("shard",) mesh.
 #   obs             the observability suites (tracing, registry,
-#                   exporter, index health) under 8 host-platform
-#                   devices, so the sharded staged-serve span path runs
-#                   over a real mesh.
+#                   exporter, index health, quality probes, SLO/alert
+#                   engine) under 8 host-platform devices, so the
+#                   sharded staged-serve span path and the probe oracle
+#                   run over a real mesh.
 #   bench-smoke     BENCH_SMOKE=1 python -m benchmarks.run: every
 #                   benchmark module end-to-end at seconds-scale shapes
 #                   (benchmarks/common.py sz()), JSON artifacts
@@ -58,6 +59,8 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
     tests/test_obs_registry.py \
     tests/test_obs_exporter.py \
     tests/test_obs_health.py \
+    tests/test_obs_quality.py \
+    tests/test_obs_slo.py \
   || { failures=$((failures + 1)); echo "[tier-3] FAILED"; }
 
 echo "[bench-smoke] BENCH_SMOKE=1 python -m benchmarks.run"

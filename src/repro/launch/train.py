@@ -28,6 +28,7 @@ from repro.data import RecsysStream, StreamConfig, lm_batch, \
     batched_molecules, random_geometric_graph
 from repro.optim import adagrad, adamw, clip_by_global_norm, \
     multi_optimizer
+from repro.serving import extract_deltas
 from repro.train import LoopConfig, run_loop
 
 
@@ -35,16 +36,13 @@ def _route(path):
     return "adagrad" if "tables" in jax.tree_util.keystr(path) else "adamw"
 
 
-def train_svq(cfg: SVQConfig, stream: RecsysStream, n_steps: int,
-              batch: int, ckpt_dir: str | None = None,
-              log_every: int = 0, seed: int = 0):
-    """-> (params, index_state, loop_result)."""
-    opt = multi_optimizer(_route, {"adagrad": adagrad(0.05),
-                                   "adamw": adamw(1e-3)})
-    params, index = retriever.init(jax.random.PRNGKey(seed), cfg)
-    state = {"params": params, "index": index, "opt": opt.init(params),
-             "step": jnp.zeros((), jnp.int32)}
+def _svq_opt():
+    return multi_optimizer(_route, {"adagrad": adagrad(0.05),
+                                    "adamw": adamw(1e-3)})
 
+
+def _svq_step_fn(cfg: SVQConfig, opt):
+    """The jitted SVQ train step shared by the offline and live loops."""
     @jax.jit
     def step_fn(state, batch):
         imp = {k: jnp.asarray(v) for k, v in batch["imp"].items()}
@@ -60,6 +58,19 @@ def train_svq(cfg: SVQConfig, stream: RecsysStream, n_steps: int,
                      used_clusters=metrics["used_clusters"],
                      perplexity=metrics["perplexity"]))
 
+    return step_fn
+
+
+def train_svq(cfg: SVQConfig, stream: RecsysStream, n_steps: int,
+              batch: int, ckpt_dir: str | None = None,
+              log_every: int = 0, seed: int = 0):
+    """-> (params, index_state, loop_result)."""
+    opt = _svq_opt()
+    params, index = retriever.init(jax.random.PRNGKey(seed), cfg)
+    state = {"params": params, "index": index, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    step_fn = _svq_step_fn(cfg, opt)
+
     def batch_iter(step):
         return {"imp": stream.impression_batch(batch),
                 "cand": stream.candidate_batch(batch)}
@@ -68,6 +79,56 @@ def train_svq(cfg: SVQConfig, stream: RecsysStream, n_steps: int,
                           ckpt_every=max(n_steps // 4, 1),
                           log_every=log_every, sync_every=10)
     res = run_loop(step_fn, state, batch_iter, loop_cfg)
+    return res.state["params"], res.state["index"], res
+
+
+def train_svq_live(cfg: SVQConfig, stream: RecsysStream, service,
+                   params, index_state, n_steps: int, batch: int,
+                   immediate: bool = True, log_every: int = 0,
+                   swap_model: bool = False, stats=None, registry=None):
+    """Continue training WHILE publishing into a live RetrievalService.
+
+    The streaming-production shape of §3.1: every train step's
+    (re)assignment write-back is diffed against the previous step's
+    store (``serving.extract_deltas``) from a ``LoopConfig.on_step``
+    hook and pushed into ``service.apply_deltas`` —
+    ``immediate=True`` edits the live index in place (spare-capacity
+    path, forced compaction on overflow); ``immediate=False`` is the
+    deferred baseline whose writes only become retrievable at the next
+    rebuild.  ``index_state`` must be the state the service currently
+    reflects (what it was constructed with / last swapped to), so the
+    first step's diff base matches the serving side.
+
+    ``swap_model=True`` additionally pushes the final params + state
+    into the service (the §3.1 model-dump cadence, one dump).
+    -> (params, index_state, loop_result).
+    """
+    opt = _svq_opt()
+    state = {"params": params, "index": index_state,
+             "opt": opt.init(params), "step": jnp.zeros((), jnp.int32)}
+    step_fn = _svq_step_fn(cfg, opt)
+    prev = {"store": index_state.store}
+
+    def on_step(step, state, b):
+        new_store = state["index"].store
+        ids = np.concatenate([
+            np.asarray(b["imp"]["item_id"]).ravel(),
+            np.asarray(b["cand"]["item_id"]).ravel()])
+        db = extract_deltas(prev["store"], new_store, jnp.asarray(ids))
+        prev["store"] = new_store
+        if db.n:
+            service.apply_deltas(db, immediate=immediate)
+
+    def batch_iter(step):
+        return {"imp": stream.impression_batch(batch),
+                "cand": stream.candidate_batch(batch)}
+
+    loop_cfg = LoopConfig(n_steps=n_steps, log_every=log_every,
+                          sync_every=10, on_step=on_step, stats=stats,
+                          registry=registry)
+    res = run_loop(step_fn, state, batch_iter, loop_cfg)
+    if swap_model:
+        service.swap_model(res.state["params"], res.state["index"])
     return res.state["params"], res.state["index"], res
 
 

@@ -3,18 +3,28 @@
 This package sits BELOW ``repro.serving`` in the import graph: obs
 modules never import serving code (they duck-type against it), so
 serving, training and benchmark code can all depend on obs without
-cycles.  Four parts:
+cycles.  Seven parts:
 
   ``histogram``     lock-exact log-spaced latency histograms and their
                     immutable snapshots / interval diffs,
+  ``sampling``      deterministic counter sampling shared by the tracer
+                    and the probe sampler,
   ``trace``         per-request span tracing with a bounded ring buffer
                     and Chrome trace-event (Perfetto) export,
   ``registry``      labeled counter/gauge/histogram registry with
                     snapshot and interval-rate views,
   ``index_health``  balance / occupancy / freshness gauges over live
                     serving indexes (paper §3.1–§3.2 as numbers),
+  ``quality``       shadow recall probes: sampled serves re-scored
+                    against the exact MIPS oracle off the hot path,
+                    windowed Recall@K / score-gap / contribution
+                    estimators,
+  ``slo``           declarative SLOs, multi-window burn-rate
+                    evaluation, typed alert log (the auto-repair
+                    signal source),
   ``exporter``      Prometheus text exposition + stdlib HTTP scrape
-                    daemon + JSON dump.
+                    daemon (/metrics /slo /alerts /healthz) + JSON
+                    dump.
 """
 from repro.obs.exporter import (
     Exporter,
@@ -30,6 +40,15 @@ from repro.obs.index_health import (
     service_health,
     sharded_index_health,
 )
+from repro.obs.quality import (
+    ContributionEstimator,
+    OracleAnswer,
+    ProbeJob,
+    ProbeResult,
+    QualityProber,
+    WindowedStat,
+    probe_metrics,
+)
 from repro.obs.registry import (
     Counter,
     Family,
@@ -37,6 +56,14 @@ from repro.obs.registry import (
     MetricRegistry,
     register_serve_stats,
     to_jsonable,
+)
+from repro.obs.sampling import CounterSampler
+from repro.obs.slo import (
+    AlertEvent,
+    SLOEngine,
+    SLOSpec,
+    SLOStatus,
+    default_service_slos,
 )
 from repro.obs.trace import (
     Span,
@@ -49,23 +76,36 @@ from repro.obs.trace import (
 )
 
 __all__ = [
+    "AlertEvent",
+    "ContributionEstimator",
     "Counter",
+    "CounterSampler",
     "Exporter",
     "Family",
     "Gauge",
     "HistogramSnapshot",
     "LatencyHistogram",
     "MetricRegistry",
+    "OracleAnswer",
+    "ProbeJob",
+    "ProbeResult",
+    "QualityProber",
+    "SLOEngine",
+    "SLOSpec",
+    "SLOStatus",
     "Span",
     "Trace",
     "Tracer",
+    "WindowedStat",
     "annotate",
+    "default_service_slos",
     "device_annotations_enabled",
     "dump_json",
     "enable_device_annotations",
     "health_of",
     "index_health",
     "make_span",
+    "probe_metrics",
     "register_index_health",
     "register_serve_stats",
     "service_health",

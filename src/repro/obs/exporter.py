@@ -17,7 +17,16 @@ container needs no new dependency:
                                                        event JSON (when
                                                        a tracer is
                                                        attached)
+                                       /slo            SLO status JSON
+                                       /alerts         alert log JSON
+                                                       (when an SLO
+                                                       engine is
+                                                       attached)
                                        /healthz        liveness probe
+                                                       (degraded = 503
+                                                       when an SLO
+                                                       burns or evals
+                                                       go stale)
   ``dump_json(registry, path)``      one-shot JSON dump (benchmarks).
 
 Scrapes read the registry through ``collect()`` — instruments resolve
@@ -31,11 +40,14 @@ import json
 import math
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Optional
+from typing import Callable, Optional, TYPE_CHECKING
 
 from repro.obs.histogram import HistogramSnapshot
 from repro.obs.registry import MetricRegistry, to_jsonable
 from repro.obs.trace import Tracer
+
+if TYPE_CHECKING:                                 # avoid import cycles
+    from repro.obs.slo import SLOEngine
 
 CONTENT_TYPE_LATEST = "text/plain; version=0.0.4; charset=utf-8"
 
@@ -103,12 +115,32 @@ def dump_json(reg: MetricRegistry, path: Optional[str] = None) -> dict:
 
 
 class Exporter:
-    """Running scrape daemon; ``close()`` releases the port."""
+    """Running scrape daemon; ``close()`` releases the port.
+
+    With an ``SLOEngine`` attached, two more routes come up (``/slo``:
+    last evaluation per objective; ``/alerts``: the bounded alert log)
+    and ``/healthz`` turns into a REAL liveness signal: 503 +
+    ``{"status": "degraded", ...}`` when any SLO is firing or the last
+    evaluation is older than ``health_staleness_s`` (a burning index or
+    a wedged evaluator both fail the probe).  Without an engine the
+    legacy static ``200 ok`` is preserved — degraded reporting is
+    opt-in by attaching the thing that can judge health.
+    """
 
     def __init__(self, registry: MetricRegistry, host: str, port: int,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 slo: Optional["SLOEngine"] = None,
+                 health_staleness_s: Optional[float] = None,
+                 health_age_fn: Optional[Callable[[], float]] = None):
         self.registry = registry
         self.tracer = tracer
+        self.slo = slo
+        self.health_staleness_s = health_staleness_s
+        # age source for the staleness check: explicit fn > engine's
+        # last-evaluation age > none (staleness check disabled)
+        if health_age_fn is None and slo is not None:
+            health_age_fn = slo.eval_age
+        self.health_age_fn = health_age_fn
         exporter = self
 
         class Handler(BaseHTTPRequestHandler):
@@ -144,8 +176,32 @@ class Exporter:
                                 .export_chrome_trace_json()
                             self._reply(200, body.encode(),
                                         "application/json")
+                    elif path == "/slo":
+                        if exporter.slo is None:
+                            self._reply(404, b"no slo engine attached\n",
+                                        "text/plain")
+                        else:
+                            body = json.dumps(exporter.slo.status(),
+                                              sort_keys=True)
+                            self._reply(200, body.encode(),
+                                        "application/json")
+                    elif path == "/alerts":
+                        if exporter.slo is None:
+                            self._reply(404, b"no slo engine attached\n",
+                                        "text/plain")
+                        else:
+                            body = json.dumps(exporter.slo.alerts())
+                            self._reply(200, body.encode(),
+                                        "application/json")
                     elif path == "/healthz":
-                        self._reply(200, b"ok\n", "text/plain")
+                        code, body = exporter.health()
+                        if isinstance(body, str):
+                            self._reply(code, body.encode(), "text/plain")
+                        else:
+                            self._reply(code,
+                                        json.dumps(body,
+                                                   sort_keys=True).encode(),
+                                        "application/json")
                     else:
                         self._reply(404, b"not found\n", "text/plain")
                 except Exception as e:           # scrape must not wedge
@@ -157,6 +213,30 @@ class Exporter:
         self._thread = threading.Thread(target=self._server.serve_forever,
                                         name="obs-exporter", daemon=True)
         self._thread.start()
+
+    def health(self):
+        """(status_code, body) for ``/healthz``.
+
+        Legacy ``(200, "ok\\n")`` when nothing judgeable is attached;
+        otherwise a JSON dict with ``status``/``burning``/``age_s``,
+        503 when degraded.
+        """
+        if self.slo is None and self.health_age_fn is None:
+            return 200, "ok\n"
+        burning = self.slo.burning() if self.slo is not None else []
+        age = self.health_age_fn() if self.health_age_fn else None
+        stale = (self.health_staleness_s is not None
+                 and age is not None
+                 and age > self.health_staleness_s)
+        degraded = bool(burning) or stale
+        body = {
+            "status": "degraded" if degraded else "ok",
+            "burning": burning,
+            "stale": stale,
+            "age_s": None if age is None or math.isinf(age) else age,
+            "staleness_bound_s": self.health_staleness_s,
+        }
+        return (503 if degraded else 200), body
 
     def url(self, path: str = "/metrics") -> str:
         return f"http://{self.host}:{self.port}{path}"
@@ -175,7 +255,14 @@ class Exporter:
 
 def start_exporter(registry: MetricRegistry, port: int = 0,
                    host: str = "127.0.0.1",
-                   tracer: Optional[Tracer] = None) -> Exporter:
+                   tracer: Optional[Tracer] = None,
+                   slo: Optional["SLOEngine"] = None,
+                   health_staleness_s: Optional[float] = None,
+                   health_age_fn: Optional[Callable[[], float]] = None,
+                   ) -> Exporter:
     """Start the scrape daemon; ``port=0`` binds an ephemeral port
-    (read it back from ``exporter.port``)."""
-    return Exporter(registry, host, port, tracer=tracer)
+    (read it back from ``exporter.port``).  Attach an ``SLOEngine``
+    to enable ``/slo`` + ``/alerts`` and degraded ``/healthz``."""
+    return Exporter(registry, host, port, tracer=tracer, slo=slo,
+                    health_staleness_s=health_staleness_s,
+                    health_age_fn=health_age_fn)

@@ -383,6 +383,8 @@ def register_serve_stats(reg: MetricRegistry, stats,
          "delta_tombstones"),
         ("delta_compactions_total", "forced rebuilds on spare overflow",
          "delta_compactions"),
+        ("auto_repairs_total", "SLO-alert-driven repair rebuilds",
+         "auto_repairs"),
     ]
     for suffix, help_, attr in counters:
         if hasattr(stats, attr):

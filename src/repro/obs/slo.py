@@ -1,0 +1,430 @@
+"""Declarative SLOs + a multi-window burn-rate evaluator + alert log.
+
+The quality probes (``obs/quality.py``) and the PR-4 metric surface
+give us scrape-able signals; this module closes the loop from signal to
+ACTION.  An ``SLOSpec`` states an objective over one registry series
+("serve p99 <= 80ms", "probe Recall@20 >= 0.85", "balance entropy
+ratio >= 0.6"); the ``SLOEngine`` evaluates every spec over a SHORT and
+a LONG window (the SRE-workbook multi-window pattern: the short window
+detects fast and resolves fast, the long window stops flapping) and
+emits typed ``AlertEvent``s into a bounded, lock-exact log on every
+firing/resolved transition.
+
+Window semantics ride the registry's interval machinery
+(``registry.snapshot()`` history + ``HistogramSnapshot`` bucket
+subtraction), so a latency objective is evaluated against "p99 over
+the last W seconds", not a lifetime percentile that can never recover:
+
+  histogram   interval percentile (``stat="p50"|"p95"|"p99"``) or
+              interval mean (``stat="mean"``) over the window,
+  gauge       worst value observed in the window (max for ``op="le"``
+              upper bounds, min for ``op="ge"`` floors),
+  counter     rate/s over the window (``stat="rate"``).
+
+Burn rate is the objective-normalized severity: ``value / objective``
+for upper bounds, ``objective / value`` for floors — 1.0 exactly at
+objective, >1 burning.  A spec fires when BOTH windows burn past
+``burn_threshold``; it resolves when the short window recovers.
+
+Listeners (``add_listener``) receive every event; that is the
+auto-repair attach point — ``RetrievalService.attach_auto_repair``
+subscribes a handler that answers a firing recall/balance alert with
+the existing forced-compaction rebuild (§3.2 "reparability" as a
+closed loop).  The exporter serves ``status()`` at ``/slo`` and
+``alerts()`` at ``/alerts``, and ``register()`` exports burn rates /
+firing flags as Prometheus series.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import (Callable, Deque, Dict, Iterable, List, NamedTuple,
+                    Optional, Tuple)
+
+from repro.obs.histogram import HistogramSnapshot
+from repro.obs.registry import Family, MetricRegistry, _diff_snapshots
+
+_STATS = ("value", "rate", "mean", "p50", "p95", "p99")
+
+
+class SLOSpec(NamedTuple):
+    """One objective over one registry series.
+
+    ``metric`` is the snapshot series key (``name`` or
+    ``name{label="v"}``, as produced by ``MetricRegistry.snapshot``).
+    ``op`` is the compliance direction: ``"le"`` = the value must stay
+    <= ``objective`` (latency bounds), ``"ge"`` = must stay >= (recall
+    / entropy floors).  ``windows`` is (short_s, long_s).
+    """
+    name: str
+    metric: str
+    objective: float
+    op: str = "le"                      # "le" | "ge"
+    stat: str = "value"                 # "value"|"rate"|"mean"|p50/95/99
+    windows: Tuple[float, float] = (60.0, 300.0)
+    burn_threshold: float = 1.0
+    description: str = ""
+
+    def validate(self) -> "SLOSpec":
+        if self.op not in ("le", "ge"):
+            raise ValueError(f"{self.name}: op must be 'le' or 'ge'")
+        if self.stat not in _STATS:
+            raise ValueError(f"{self.name}: stat must be one of {_STATS}")
+        if self.objective <= 0:
+            raise ValueError(f"{self.name}: objective must be > 0")
+        if len(self.windows) != 2 or self.windows[0] > self.windows[1]:
+            raise ValueError(f"{self.name}: windows must be "
+                             "(short_s, long_s) with short <= long")
+        return self
+
+
+class AlertEvent(NamedTuple):
+    """One firing/resolved transition (typed, JSON-normalizable)."""
+    seq: int
+    t: float                            # time.monotonic() at emit
+    slo: str
+    state: str                          # "firing" | "resolved"
+    metric: str
+    objective: float
+    op: str
+    value_short: Optional[float]
+    value_long: Optional[float]
+    burn_short: Optional[float]
+    burn_long: Optional[float]
+
+    def to_dict(self) -> Dict[str, object]:
+        return self._asdict()
+
+
+class SLOStatus(NamedTuple):
+    """Last evaluation of one spec (cached for /slo + scrape export)."""
+    spec: SLOSpec
+    value_short: Optional[float]
+    value_long: Optional[float]
+    burn_short: Optional[float]
+    burn_long: Optional[float]
+    burning: bool
+    since: Optional[float]              # firing since (monotonic)
+
+    def to_dict(self) -> Dict[str, object]:
+        d = dict(self.spec._asdict())
+        d.update(value_short=self.value_short, value_long=self.value_long,
+                 burn_short=self.burn_short, burn_long=self.burn_long,
+                 burning=self.burning, since=self.since)
+        return d
+
+
+def _burn(value: Optional[float], objective: float, op: str
+          ) -> Optional[float]:
+    """Objective-normalized severity; None = no data in the window."""
+    if value is None:
+        return None
+    if op == "le":
+        return value / objective
+    return float("inf") if value <= 0 else objective / value
+
+
+class SLOEngine:
+    """Multi-window burn-rate evaluator over a ``MetricRegistry``.
+
+    ``evaluate()`` takes one registry snapshot, appends it to the
+    bounded history ring, scores every spec against the history, and
+    emits transition events (returned AND appended to the alert log AND
+    fanned out to listeners).  Run it from a poll loop
+    (``start(interval_s)``) or call it directly (tests, benchmarks —
+    pass ``now`` to drive virtual time).
+
+    Listeners run OUTSIDE the engine lock (a repair listener does a
+    synchronous index rebuild); the alert log is lock-exact: with
+    capacity R, after N events it holds exactly the last min(N, R) and
+    ``n_alerts_dropped == max(N - R, 0)``.
+    """
+
+    def __init__(self, registry: MetricRegistry,
+                 specs: Iterable[SLOSpec] = (),
+                 alert_capacity: int = 256):
+        if alert_capacity < 1:
+            raise ValueError("alert_capacity must be >= 1")
+        self.registry = registry
+        self.alert_capacity = alert_capacity
+        self._lock = threading.Lock()
+        self._specs: Dict[str, SLOSpec] = {}
+        self._history: Deque[Tuple[float, Dict[str, Dict[str, object]]]] \
+            = deque()
+        self._status: Dict[str, SLOStatus] = {}
+        self._since: Dict[str, float] = {}       # firing-since per spec
+        self._alerts: Deque[AlertEvent] = deque()
+        self._listeners: List[Callable[[AlertEvent], None]] = []
+        self._seq = 0
+        self.n_evals = 0
+        self.n_alerts = 0                        # events emitted, total
+        self.n_alerts_dropped = 0
+        self.last_eval_t: Optional[float] = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        for s in specs:
+            self.add(s)
+
+    # -- spec management ---------------------------------------------------
+    def add(self, spec: SLOSpec) -> SLOSpec:
+        spec = spec.validate()
+        with self._lock:
+            if spec.name in self._specs:
+                raise ValueError(f"SLO {spec.name!r} already registered")
+            self._specs[spec.name] = spec
+        return spec
+
+    def specs(self) -> List[SLOSpec]:
+        with self._lock:
+            return list(self._specs.values())
+
+    def add_listener(self, fn: Callable[[AlertEvent], None]
+                     ) -> Callable[[AlertEvent], None]:
+        """Subscribe to every emitted event (the auto-repair hook)."""
+        with self._lock:
+            self._listeners.append(fn)
+        return fn
+
+    # -- window math -------------------------------------------------------
+    def _window_value(self, spec: SLOSpec, window_s: float, now: float,
+                      cur: Dict[str, Dict[str, object]],
+                      history) -> Optional[float]:
+        entry = cur.get(spec.metric)
+        if entry is None:
+            return None
+        mtype, value = entry["type"], entry["value"]
+        # base snapshot for interval views: the newest history entry at
+        # least ``window_s`` old, else the oldest available (startup)
+        base_t, base_snap = None, None
+        for t, snap in history:                  # oldest -> newest
+            if t <= now - window_s:
+                base_t, base_snap = t, snap
+            else:
+                break
+        if base_snap is None and history:
+            base_t, base_snap = history[0]
+        if isinstance(value, HistogramSnapshot):
+            prev = None
+            if base_snap is not None:
+                p = base_snap.get(spec.metric)
+                if p is not None and isinstance(p["value"],
+                                                HistogramSnapshot):
+                    prev = p["value"]
+            try:
+                interval = _diff_snapshots(value, prev)
+            except ValueError:                   # histogram was reset
+                interval = value
+            if interval.count == 0:
+                return None
+            if spec.stat == "mean":
+                return interval.mean
+            q = {"p50": 0.50, "p95": 0.95, "p99": 0.99}.get(spec.stat)
+            if q is None:
+                raise ValueError(
+                    f"{spec.name}: stat {spec.stat!r} invalid for "
+                    "histogram series")
+            return interval.percentile(q)
+        value = float(value)
+        if mtype == "counter" and spec.stat == "rate":
+            if base_snap is None or base_t is None or base_t >= now:
+                return None
+            p = base_snap.get(spec.metric)
+            pv = float(p["value"]) if p else 0.0
+            return (value - pv) / (now - base_t)
+        # gauge (or counter watched as a level): worst value the window
+        # observed, so a transient dip below a floor cannot hide behind
+        # a recovered current value before the evaluator saw it
+        vals = [value]
+        for t, snap in history:
+            if t >= now - window_s:
+                p = snap.get(spec.metric)
+                if p is not None and not isinstance(
+                        p["value"], HistogramSnapshot):
+                    vals.append(float(p["value"]))
+        return max(vals) if spec.op == "le" else min(vals)
+
+    # -- evaluation --------------------------------------------------------
+    def evaluate(self, now: Optional[float] = None) -> List[AlertEvent]:
+        """One evaluation pass; returns the transition events it emitted."""
+        now = time.monotonic() if now is None else now
+        snap = self.registry.snapshot()          # outside the lock:
+        events: List[AlertEvent] = []            # collectors take locks
+        with self._lock:
+            history = list(self._history)
+            specs = list(self._specs.values())
+        for spec in specs:
+            vs = self._window_value(spec, spec.windows[0], now, snap,
+                                    history)
+            vl = self._window_value(spec, spec.windows[1], now, snap,
+                                    history)
+            bs = _burn(vs, spec.objective, spec.op)
+            bl = _burn(vl, spec.objective, spec.op)
+            burning = (bs is not None and bl is not None
+                       and bs >= spec.burn_threshold
+                       and bl >= spec.burn_threshold)
+            with self._lock:
+                was = self._since.get(spec.name) is not None
+                if burning and not was:
+                    self._since[spec.name] = now
+                elif not burning and was:
+                    del self._since[spec.name]
+                since = self._since.get(spec.name)
+                self._status[spec.name] = SLOStatus(
+                    spec, vs, vl, bs, bl, burning, since)
+                if burning != was:
+                    self._seq += 1
+                    ev = AlertEvent(
+                        self._seq, now, spec.name,
+                        "firing" if burning else "resolved",
+                        spec.metric, spec.objective, spec.op,
+                        vs, vl, bs, bl)
+                    if len(self._alerts) >= self.alert_capacity:
+                        self._alerts.popleft()
+                        self.n_alerts_dropped += 1
+                    self._alerts.append(ev)
+                    self.n_alerts += 1
+                    events.append(ev)
+        with self._lock:
+            self._history.append((now, snap))
+            max_w = max((s.windows[1] for s in specs), default=300.0)
+            # drop leading entries once the NEXT entry can serve every
+            # window as a base (keep one entry older than the window)
+            while (len(self._history) > 2
+                   and self._history[1][0] <= now - max_w):
+                self._history.popleft()
+            self.n_evals += 1
+            self.last_eval_t = now
+            listeners = list(self._listeners)
+        for ev in events:                        # outside the lock: a
+            for fn in listeners:                 # repair listener does
+                try:                             # a synchronous rebuild
+                    fn(ev)
+                except Exception:
+                    pass
+        return events
+
+    # -- reading -----------------------------------------------------------
+    def status(self) -> Dict[str, Dict[str, object]]:
+        """Last evaluation per spec (the /slo route body)."""
+        with self._lock:
+            return {name: st.to_dict()
+                    for name, st in sorted(self._status.items())}
+
+    def burning(self) -> List[str]:
+        """Names of currently firing SLOs."""
+        with self._lock:
+            return sorted(name for name, st in self._status.items()
+                          if st.burning)
+
+    def alerts(self) -> List[Dict[str, object]]:
+        """Alert log, oldest first (the /alerts route body)."""
+        with self._lock:
+            return [ev.to_dict() for ev in self._alerts]
+
+    def eval_age(self, now: Optional[float] = None) -> float:
+        """Seconds since the last evaluation (inf before the first)."""
+        with self._lock:
+            if self.last_eval_t is None:
+                return float("inf")
+            now = time.monotonic() if now is None else now
+            return max(now - self.last_eval_t, 0.0)
+
+    # -- background poll loop ----------------------------------------------
+    def start(self, interval_s: float) -> None:
+        """Evaluate every ``interval_s`` on a daemon thread."""
+        with self._lock:
+            if self._thread is not None:
+                raise RuntimeError("SLO engine already running")
+            self._stop.clear()
+
+            def loop():
+                while not self._stop.wait(interval_s):
+                    self.evaluate()
+
+            self._thread = threading.Thread(target=loop, daemon=True,
+                                            name="slo-engine")
+            self._thread.start()
+
+    def stop(self) -> None:
+        with self._lock:
+            thread, self._thread = self._thread, None
+        if thread is not None:
+            self._stop.set()
+            thread.join()
+
+    # -- export ------------------------------------------------------------
+    def register(self, reg: Optional[MetricRegistry] = None,
+                 namespace: str = "svq") -> MetricRegistry:
+        """Export SLO state as Prometheus series (burn rates per window,
+        firing flags, objectives, alert counters) via a scrape-time
+        collector over the CACHED last evaluation — a scrape never
+        triggers an evaluation."""
+        reg = self.registry if reg is None else reg
+        ns = namespace
+        engine = self
+
+        def _collect() -> List[Family]:
+            with engine._lock:
+                statuses = sorted(engine._status.items())
+                counters = [
+                    (f"{ns}_slo_evals_total", engine.n_evals,
+                     "SLO evaluation passes"),
+                    (f"{ns}_slo_alerts_total", engine.n_alerts,
+                     "alert transitions emitted"),
+                ]
+            burn, firing, objective = [], [], []
+            for name, st in statuses:
+                firing.append(({"slo": name}, 1.0 if st.burning else 0.0))
+                objective.append(({"slo": name}, float(st.spec.objective)))
+                for wname, b in (("short", st.burn_short),
+                                 ("long", st.burn_long)):
+                    if b is not None:
+                        burn.append(({"slo": name, "window": wname},
+                                     float(b)))
+            fams = [
+                Family(f"{ns}_slo_burning", "gauge",
+                       "1 when the SLO is firing (both windows burning)",
+                       firing),
+                Family(f"{ns}_slo_objective", "gauge",
+                       "declared objective per SLO", objective),
+                Family(f"{ns}_slo_burn_rate", "gauge",
+                       "objective-normalized burn rate per window "
+                       "(1.0 = exactly at objective)", burn),
+            ]
+            for name, v, help_ in counters:
+                fams.append(Family(name, "counter", help_,
+                                   [({}, float(v))]))
+            return fams
+
+        reg.register_collector(_collect)
+        return reg
+
+
+def default_service_slos(namespace: str = "svq",
+                         serve_p99_s: float = 0.25,
+                         freshness_p99_s: float = 5.0,
+                         entropy_floor: float = 0.5,
+                         recall_floor: float = 0.8,
+                         windows: Tuple[float, float] = (30.0, 120.0),
+                         ) -> List[SLOSpec]:
+    """The paper-property SLO set over a ``RetrievalService`` registered
+    with ``register_metrics()`` + ``enable_probes()`` under
+    ``namespace``: serve tail (Appendix B), index immediacy (§3.1),
+    index balance (§3.2), and probe-observed retrieval quality."""
+    ns = namespace
+    return [
+        SLOSpec(f"{ns}_serve_p99", f"{ns}_serve_latency_seconds",
+                serve_p99_s, op="le", stat="p99", windows=windows,
+                description="serve_batch wall-time p99 upper bound"),
+        SLOSpec(f"{ns}_freshness_p99", f"{ns}_freshness_seconds",
+                freshness_p99_s, op="le", stat="p99", windows=windows,
+                description="assignment write -> retrievable p99 bound"),
+        SLOSpec(f"{ns}_balance_entropy",
+                f"{ns}_index_cluster_entropy_ratio",
+                entropy_floor, op="ge", stat="value", windows=windows,
+                description="cluster-balance entropy-ratio floor"),
+        SLOSpec(f"{ns}_probe_recall", f"{ns}_probe_recall",
+                recall_floor, op="ge", stat="value", windows=windows,
+                description="shadow-probe Recall@K floor"),
+    ]

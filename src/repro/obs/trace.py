@@ -38,6 +38,8 @@ import time
 from collections import deque
 from typing import Deque, Dict, Iterator, List, Optional
 
+from repro.obs.sampling import CounterSampler
+
 # -- optional device-profile bridging ---------------------------------------
 
 _DEVICE_ANNOTATIONS = False
@@ -130,22 +132,26 @@ class Tracer:
     """Trace factory + bounded completed-trace ring buffer.
 
     ``sample_every=k`` keeps tracing affordable under heavy traffic:
-    every k-th started request is traced (deterministic counter, not a
-    PRNG, so tests and benchmarks are reproducible); ``k=1`` traces all.
-    ``enabled=False`` short-circuits every entry point to one branch.
+    every k-th started request is traced (a deterministic
+    ``obs/sampling.py`` counter, not a PRNG, so tests and benchmarks are
+    reproducible); ``k=1`` traces all.  ``enabled=False`` short-circuits
+    every entry point to one branch.  Pass ``sampler=`` to SHARE one
+    sampling decision stream with another consumer (e.g. a
+    ``QualityProber``), so sampled traces and probes are the same
+    requests.
     """
 
     def __init__(self, capacity: int = 1024, enabled: bool = True,
-                 sample_every: int = 1):
+                 sample_every: int = 1,
+                 sampler: Optional[CounterSampler] = None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
-        if sample_every < 1:
-            raise ValueError("sample_every must be >= 1")
         self.capacity = capacity
         self.enabled = enabled
-        self.sample_every = sample_every
+        self._sampler = sampler if sampler is not None \
+            else CounterSampler(every=sample_every)
+        self.sample_every = self._sampler.every
         self._ids = itertools.count(1)
-        self._sample = itertools.count()
         self._lock = threading.Lock()
         self._ring: Deque[Trace] = deque()
         self.n_started = 0
@@ -157,7 +163,7 @@ class Tracer:
         """One deterministic sampling decision (call once per request)."""
         if not self.enabled:
             return False
-        return next(self._sample) % self.sample_every == 0
+        return self._sampler.should_sample()
 
     def start_trace(self, name: str, **attrs) -> Trace:
         with self._lock:

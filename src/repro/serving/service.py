@@ -30,11 +30,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.baselines import brute_force
 from repro.configs.base import SVQConfig
 from repro.core import assignment_store as astore
+from repro.core import merge_sort
 from repro.core import retriever
+from repro.models.dense import mlp
 from repro.obs.index_health import health_of, register_index_health
+from repro.obs import quality as quality_lib
 from repro.obs import registry as registry_lib
+from repro.obs import sampling as sampling_lib
 from repro.obs import trace as trace_lib
 from repro.serving import batcher as batcher_lib
 from repro.serving import deltas as deltas_lib
@@ -128,6 +133,18 @@ class RetrievalService:
         self._stage_merge_jit = jax.jit(_stage_merge)
         self._stage_ranking_jit = jax.jit(_stage_ranking,
                                           static_argnames=("task",))
+        # shadow-probe pipeline (obs/quality.py): attached by
+        # enable_probes(); the oracle user tower is a separate tiny jit
+        # so probe re-scoring never touches the serve jits
+
+        def _user_emb(p, b, task):
+            user_feat, _ = retriever.user_features(p, b["user_id"],
+                                                   b["hist"])
+            return jax.vmap(lambda tw: mlp(tw, user_feat))(
+                p["user_towers"])[task]
+
+        self._user_emb_jit = jax.jit(_user_emb, static_argnames=("task",))
+        self.prober: Optional[quality_lib.QualityProber] = None
 
     # -- index lifecycle (swap.py) -----------------------------------------
     def _build_index(self):
@@ -372,6 +389,19 @@ class RetrievalService:
             own_trace.attrs["generation"] = gen.epoch
             own_trace.spans.extend(span_sink)
             self.tracer.finish(own_trace)
+        prober = self.prober
+        if prober is not None and prober.should_sample():
+            # merge-order view keeps ids, validity and exact scores
+            # aligned in ONE order (exact_scores carries NEG sentinels
+            # exactly where the candidate slot is invalid)
+            exact = out["exact_scores"]
+            prober.submit(quality_lib.ProbeJob(
+                batch={k: np.asarray(v) for k, v in batch.items()},
+                served_ids=out["index_ids"],
+                served_valid=exact > merge_sort.NEG / 2,
+                served_exact=exact,
+                task=task, generation=gen.epoch,
+                t_serve=time.monotonic(), n_valid=n_valid))
         return out
 
     def make_batcher(self, max_batch: int = 64,
@@ -383,6 +413,123 @@ class RetrievalService:
             self.serve_batch, max_batch=max_batch,
             max_delay_s=max_delay_s, buckets=buckets, stats=self.stats,
             tracer=self.tracer)
+
+    # -- shadow quality probes (obs/quality.py) -----------------------------
+    def _probe_oracle(self, job: quality_lib.ProbeJob
+                      ) -> quality_lib.OracleAnswer:
+        """Exact re-scoring of one sampled serve (probe worker thread).
+
+        Params + store are captured under ONE ``self._lock``
+        acquisition, so the oracle never scores against a half-swapped
+        model or a partially written store — the consistency contract
+        ``OracleAnswer`` documents.  The corpus is the CURRENT store
+        (deltas included even when the live index has not published
+        them), which is exactly what makes probe recall a staleness
+        signal: an item the store holds but the index cannot retrieve
+        is a probe miss.
+        """
+        with self._lock:
+            params = self._params
+            store = self._index_state.store
+        jbatch = {k: jnp.asarray(v) for k, v in job.batch.items()}
+        u = self._user_emb_jit(params, jbatch, task=job.task)
+        # empty slots carry zero embeddings; the NEG bias mask keeps
+        # them out of the oracle's top-k even against negative scores
+        bias = jnp.where(store.cluster >= 0, store.item_bias,
+                         merge_sort.NEG)
+        vals, slots = brute_force.mips_topk(u, store.item_emb, bias,
+                                            self.prober.k)
+        exact_ids = np.asarray(store.item_id)[np.asarray(slots)]
+        exact_scores = np.asarray(vals)
+        served = np.where(job.served_valid, job.served_ids, 0)
+        clof = np.asarray(astore.read_cluster(store, jnp.asarray(served)))
+        clof = np.where(job.served_valid, clof, -1)
+        shard_of, n_shards = None, 0
+        if self.n_shards:
+            per = max(self.cfg.n_clusters // self.n_shards, 1)
+            shard_of = np.where(clof >= 0, clof // per, -1)
+            n_shards = self.n_shards
+        return quality_lib.OracleAnswer(
+            exact_ids=exact_ids, exact_scores=exact_scores,
+            cluster_of=clof, n_clusters=self.cfg.n_clusters,
+            shard_of=shard_of, n_shards=n_shards)
+
+    def enable_probes(self, k: int = 20, sample_every: int = 8,
+                      window: int = 512, max_queue: int = 64,
+                      sampler: Optional[sampling_lib.CounterSampler] = None,
+                      registry: Optional[
+                          registry_lib.MetricRegistry] = None,
+                      namespace: str = "svq"
+                      ) -> quality_lib.QualityProber:
+        """Attach the shadow-probe pipeline to this service.
+
+        Sampled ``serve_batch`` calls are re-scored against the exact
+        MIPS oracle over the live store, off the hot path; pass
+        ``sampler=`` (e.g. the tracer's) to make probes and traces the
+        same requests.  Pass ``registry=`` to export the probe gauges
+        immediately; a later ``register_metrics`` exports them too.
+        """
+        if self.prober is not None:
+            raise RuntimeError("probes already enabled")
+        self.prober = quality_lib.QualityProber(
+            self._probe_oracle, k=k, sample_every=sample_every,
+            sampler=sampler, window=window, max_queue=max_queue)
+        if registry is not None:
+            self.prober.register(registry, namespace=namespace)
+        return self.prober
+
+    def disable_probes(self) -> None:
+        """Stop the probe worker (idempotent)."""
+        prober, self.prober = self.prober, None
+        if prober is not None:
+            prober.close()
+
+    # -- alert-driven auto-repair (obs/slo.py) ------------------------------
+    def repair(self, reason: str = "") -> IndexGeneration:
+        """One repair action: the forced-compaction rebuild.
+
+        The same ticket-guarded ``swap.py`` build path a spare-capacity
+        overflow takes — a full candidate scan of the CURRENT store into
+        a fresh dense generation, folding in every pending delta-log
+        entry.  This is the paper's "reparability" property invoked as
+        a closed loop: it restores balance (fresh segments), recall
+        (unpublished store content becomes retrievable) and spare
+        headroom in one publish.
+        """
+        with self._lock:
+            self.stats.auto_repairs += 1
+        return self.rebuild_index()
+
+    def attach_auto_repair(self, engine, slos=None,
+                           cooldown_s: float = 30.0):
+        """Subscribe ``repair()`` to an ``SLOEngine``'s alert stream.
+
+        Fires on ``"firing"`` transitions only; ``slos`` (iterable of
+        SLO names) restricts which alerts trigger a repair (default:
+        any).  ``cooldown_s`` rate-limits repairs so a persistently
+        burning objective cannot convert the alert stream into a
+        rebuild storm.  Returns the listener (useful in tests).
+        """
+        watched = None if slos is None else frozenset(slos)
+        gate_lock = threading.Lock()
+        state = {"last": None}
+        service = self
+
+        def on_alert(event) -> None:
+            if event.state != "firing":
+                return
+            if watched is not None and event.slo not in watched:
+                return
+            with gate_lock:
+                now = time.monotonic()
+                last = state["last"]
+                if last is not None and now - last < cooldown_s:
+                    return
+                state["last"] = now
+            service.repair(reason=event.slo)
+
+        engine.add_listener(on_alert)
+        return on_alert
 
     # -- observability surface ---------------------------------------------
     def health_snapshot(self, now: Optional[float] = None
@@ -431,6 +578,8 @@ class RetrievalService:
                 [({}, self._buffer.build_hist.snapshot())])]
 
         reg.register_collector(_build_hist)
+        if self.prober is not None:
+            self.prober.register(reg, namespace=namespace)
         if self.tracer is not None:
             tracer = self.tracer
             reg.counter_fn(f"{namespace}_traces_finished_total",

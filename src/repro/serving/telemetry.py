@@ -53,6 +53,8 @@ class ServeStats:
     delta_compactions: int = 0          # forced rebuilds on spare overflow
     delta_version: int = 0              # log version of the last serve
     stale_builds: int = 0               # builds dropped by the swap guard
+    # SLO-alert-driven repair rebuilds (service.repair / obs/slo.py)
+    auto_repairs: int = 0
     # batched-serve latency (serve_batch wall time)
     latency: LatencyHistogram = dataclasses.field(
         default_factory=LatencyHistogram)
@@ -119,6 +121,7 @@ class ServeStats:
             delta_compactions=self.delta_compactions,
             delta_version=self.delta_version,
             stale_builds=self.stale_builds,
+            auto_repairs=self.auto_repairs,
             latency=self.latency.to_dict(),
             freshness=self.freshness.to_dict(),
             stages={k: v.to_dict() for k, v in sorted(self.stages.items())})

@@ -1,0 +1,374 @@
+"""Quality-probe suite: shared counter sampling, windowed estimators,
+probe metric math against hand-computed cases, the async prober
+pipeline (bounded queue, drop accounting, error isolation), registry
+export, and the live-service wiring (``enable_probes`` oracle
+consistency, batcher-padding row slicing, sharded contribution)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from _obs_svc import make_service
+from test_obs_exporter import _assert_valid_exposition
+from repro.obs.exporter import to_prometheus_text
+from repro.obs.quality import (ContributionEstimator, OracleAnswer,
+                               ProbeJob, QualityProber, WindowedStat,
+                               probe_metrics)
+from repro.obs.registry import MetricRegistry
+from repro.obs.sampling import CounterSampler
+from repro.obs.trace import Tracer
+
+
+# ---------------------------------------------------------------------------
+# sampling (shared with the tracer)
+# ---------------------------------------------------------------------------
+
+def test_counter_sampler_every_kth():
+    s = CounterSampler(every=3)
+    picks = [s.should_sample() for _ in range(9)]
+    assert picks == [True, False, False] * 3
+
+
+def test_counter_sampler_validates():
+    with pytest.raises(ValueError):
+        CounterSampler(every=0)
+
+
+def test_counter_sampler_disabled_consumes_no_tick():
+    s = CounterSampler(every=2)
+    s.enabled = False
+    assert [s.should_sample() for _ in range(3)] == [False] * 3
+    s.enabled = True
+    # phase unshifted: the first enabled call is still tick 0
+    assert s.should_sample() is True
+
+
+def test_tracer_and_prober_share_one_sampler():
+    """One shared sampler: a single decision stream drives both, so the
+    requests that get traced are exactly the requests that get probed."""
+    shared = CounterSampler(every=2)
+    tracer = Tracer(sampler=shared)
+    prober = QualityProber(lambda job: None, k=1, sampler=shared)
+    try:
+        # the service makes ONE decision per request and fans it out;
+        # consecutive requests alternate sampled / unsampled
+        decisions = [tracer.should_sample() for _ in range(4)]
+        assert decisions == [True, False, True, False]
+        assert tracer.sample_every == prober.sample_every == 2
+    finally:
+        prober.close()
+
+
+def test_separate_samplers_same_period_coincide():
+    a = CounterSampler(every=3)
+    b = CounterSampler(every=3)
+    pa = [a.should_sample() for _ in range(9)]
+    pb = [b.should_sample() for _ in range(9)]
+    assert pa == pb
+
+
+# ---------------------------------------------------------------------------
+# estimators
+# ---------------------------------------------------------------------------
+
+def test_windowed_stat_matches_numpy_over_window():
+    st = WindowedStat(window=4)
+    st.update(np.array([1.0, 2.0, 3.0, 4.0, 5.0, 6.0]))
+    snap = st.snapshot()
+    win = np.array([3.0, 4.0, 5.0, 6.0])        # last 4 only
+    assert snap["n"] == 4 and snap["lifetime"] == 6
+    assert snap["mean"] == pytest.approx(win.mean())
+    se = win.std(ddof=1) / np.sqrt(4)
+    assert snap["stderr"] == pytest.approx(se)
+    assert snap["ci_high"] - snap["ci_low"] == pytest.approx(2 * 1.96 * se)
+
+
+def test_windowed_stat_empty_and_single():
+    st = WindowedStat(window=8)
+    assert st.snapshot()["mean"] == 0.0
+    st.update(np.array([2.0]))
+    s = st.snapshot()
+    assert s["mean"] == 2.0 and s["stderr"] == 0.0
+
+
+def test_contribution_uniform_entropy_ratio_is_one():
+    est = ContributionEstimator(window=8)
+    est.update(np.array([5, 5, 5, 5]))
+    snap = est.snapshot()
+    assert snap["entropy_ratio"] == pytest.approx(1.0)
+    assert snap["max_ratio"] == pytest.approx(0.25)
+    assert snap["active_buckets"] == 4
+
+
+def test_contribution_window_eviction_and_collapse():
+    est = ContributionEstimator(window=2)
+    est.update(np.array([10, 0]))
+    est.update(np.array([0, 10]))
+    assert est.ratios() == pytest.approx([0.5, 0.5])
+    est.update(np.array([0, 10]))               # evicts the [10, 0] probe
+    assert est.ratios() == pytest.approx([0.0, 1.0])
+    assert est.snapshot()["entropy_ratio"] == pytest.approx(0.0)
+
+
+def test_contribution_resets_on_bucket_space_change():
+    est = ContributionEstimator(window=8)
+    est.update(np.array([1, 1]))
+    est.update(np.array([3, 0, 0]))             # resharded: 2 -> 3 buckets
+    assert est.ratios() == pytest.approx([1.0, 0.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# probe metric math (hand-computed)
+# ---------------------------------------------------------------------------
+
+def _job(served, valid, exact, n_valid=None):
+    return ProbeJob(batch={}, served_ids=np.asarray(served),
+                    served_valid=np.asarray(valid, bool),
+                    served_exact=np.asarray(exact, np.float64),
+                    task=0, generation=1, t_serve=0.0, n_valid=n_valid)
+
+
+def _ans(exact_ids, exact_scores, clof, n_clusters=4,
+         shof=None, n_shards=0):
+    return OracleAnswer(np.asarray(exact_ids),
+                        np.asarray(exact_scores, np.float64),
+                        np.asarray(clof), n_clusters,
+                        None if shof is None else np.asarray(shof),
+                        n_shards)
+
+
+def test_probe_metrics_recall_and_gap():
+    job = _job([[0, 1, 9, 8], [0, 1, 2, 3]],
+               [[True] * 4, [True] * 4],
+               [[4.0, 3.0, 0.5, 0.25], [4.0, 3.0, 2.0, 1.0]])
+    ans = _ans([[0, 1, 2, 3]] * 2, [[4.0, 3.0, 2.0, 1.0]] * 2,
+               clof=np.zeros((2, 4), np.int64))
+    res = probe_metrics(job, ans, k=4)
+    # row 0 retrieved {0,1} of the oracle's {0,1,2,3}
+    assert res.recalls == pytest.approx([0.5, 1.0])
+    # row 0 gap: oracle mean 2.5 vs served sorted-desc mean 1.9375
+    assert res.gaps == pytest.approx([0.5625, 0.0])
+    assert res.cluster_counts.tolist() == [8, 0, 0, 0]
+
+
+def test_probe_metrics_invalid_rows_masked():
+    # only 2 valid served slots: recall denominator stays k, the gap
+    # compares equal-length prefixes (m = 2), invalid NEGs never leak
+    job = _job([[0, 1, -1, -1]], [[True, True, False, False]],
+               [[4.0, 3.0, -1e30, -1e30]])
+    ans = _ans([[0, 1, 2, 3]], [[4.0, 3.0, 2.0, 1.0]],
+               clof=[[0, 1, -1, -1]])
+    res = probe_metrics(job, ans, k=4)
+    assert res.recalls == pytest.approx([0.5])
+    assert res.gaps == pytest.approx([0.0])     # top-2 vs top-2 identical
+    assert res.cluster_counts.tolist() == [1, 1, 0, 0]
+
+
+def test_probe_metrics_n_valid_slices_padded_rows():
+    # batcher padding: rows past n_valid repeat row 0 and must not
+    # double-count contribution or recall
+    job = _job([[0, 1], [0, 1], [0, 1]], np.ones((3, 2), bool),
+               [[2.0, 1.0]] * 3, n_valid=1)
+    ans = _ans([[0, 1]] * 3, [[2.0, 1.0]] * 3,
+               clof=[[0, 1]] * 3)
+    res = probe_metrics(job, ans, k=2)
+    assert res.n_rows == 1
+    assert res.cluster_counts.tolist() == [1, 1, 0, 0]
+
+
+def test_probe_metrics_shard_counts():
+    job = _job([[0, 1, 2, 3]], [[True] * 4], [[4.0, 3.0, 2.0, 1.0]])
+    ans = _ans([[0, 1, 2, 3]], [[4.0, 3.0, 2.0, 1.0]],
+               clof=[[0, 1, 2, 3]], shof=[[0, 0, 1, 1]], n_shards=2)
+    res = probe_metrics(job, ans, k=4)
+    assert res.shard_counts.tolist() == [2, 2]
+
+
+# ---------------------------------------------------------------------------
+# async prober pipeline
+# ---------------------------------------------------------------------------
+
+def _perfect_oracle(job):
+    k = job.served_ids.shape[1]
+    return _ans(job.served_ids, np.sort(job.served_exact)[:, ::-1],
+                clof=np.zeros_like(job.served_ids))
+
+
+def test_prober_scores_and_counts():
+    with QualityProber(_perfect_oracle, k=4, sample_every=1,
+                       window=16) as p:
+        for _ in range(3):
+            assert p.should_sample()
+            assert p.submit(_job([[0, 1, 2, 3]], [[True] * 4],
+                                 [[4.0, 3.0, 2.0, 1.0]]))
+        assert p.drain(10.0)
+        s = p.snapshot()
+    assert s["n_sampled"] == s["n_scored"] == 3
+    assert s["n_rows_scored"] == 3 and s["n_errors"] == 0
+    assert s["recall"]["mean"] == pytest.approx(1.0)
+    assert s["score_gap"]["mean"] == pytest.approx(0.0)
+    assert s["probe_lag"]["count"] == 3
+
+
+def test_prober_queue_full_drops_not_blocks():
+    gate = threading.Event()
+
+    def slow_oracle(job):
+        gate.wait(10.0)
+        return _perfect_oracle(job)
+
+    p = QualityProber(slow_oracle, k=2, max_queue=1)
+    try:
+        job = _job([[0, 1]], [[True, True]], [[2.0, 1.0]])
+        p.submit(job)                           # worker picks this up
+        deadline = time.monotonic() + 5.0
+        while len(p._queue) and time.monotonic() < deadline:
+            time.sleep(0.001)                   # wait for the pop
+        p.submit(job)                           # fills the queue
+        t0 = time.monotonic()
+        dropped_ok = p.submit(job)              # queue full -> drop
+        assert time.monotonic() - t0 < 1.0      # never blocked
+        assert dropped_ok is False
+        assert p.n_dropped >= 1
+        gate.set()
+        assert p.drain(10.0)
+    finally:
+        gate.set()
+        p.close()
+    assert p.n_scored == 2
+
+
+def test_prober_oracle_error_isolated():
+    def bad(job):
+        raise RuntimeError("oracle down")
+    with QualityProber(bad, k=2) as p:
+        p.submit(_job([[0, 1]], [[True, True]], [[2.0, 1.0]]))
+        assert p.drain(10.0)
+        assert p.n_errors == 1 and p.n_scored == 0
+    # estimators untouched
+    assert p.recall.snapshot()["n"] == 0
+
+
+def test_prober_registry_export_parses():
+    reg = MetricRegistry()
+    with QualityProber(lambda job: _ans(
+            job.served_ids, job.served_exact,
+            clof=np.zeros_like(job.served_ids),
+            shof=np.zeros_like(job.served_ids), n_shards=2),
+            k=2, window=8) as p:
+        p.register(reg)
+        p.submit(_job([[0, 1]], [[True, True]], [[2.0, 1.0]]))
+        assert p.drain(10.0)
+        text = to_prometheus_text(reg)
+    types, samples = _assert_valid_exposition(text)
+    for name in ("svq_probe_recall", "svq_probe_score_gap",
+                 "svq_probe_contribution_entropy_ratio",
+                 "svq_probe_shard_contribution",
+                 "svq_probes_scored_total", "svq_probe_lag_seconds"):
+        assert name in types, name
+    assert "svq_probe_recall 1.0" in samples
+    assert 'svq_probe_shard_contribution{shard="0"} 1.0' in samples
+
+
+# ---------------------------------------------------------------------------
+# live-service wiring
+# ---------------------------------------------------------------------------
+
+def test_service_probes_end_to_end():
+    _, svc, batch = make_service()
+    reg = MetricRegistry()
+    prober = svc.enable_probes(k=8, sample_every=1, window=64,
+                               registry=reg)
+    try:
+        for _ in range(4):
+            svc.serve_batch(batch)
+        assert prober.drain(30.0)
+        s = prober.snapshot()
+        assert s["n_scored"] == 4 and s["n_errors"] == 0
+        assert 0.0 <= s["recall"]["mean"] <= 1.0
+        assert s["recall"]["ci_low"] <= s["recall"]["mean"] \
+            <= s["recall"]["ci_high"]
+        # gap is oracle-minus-served: the exact oracle can't lose
+        assert s["score_gap"]["mean"] >= -1e-5
+        snap = reg.snapshot()
+        assert snap["svq_probe_recall"]["value"] == \
+            pytest.approx(s["recall"]["mean"])
+    finally:
+        svc.disable_probes()
+    assert svc.prober is None
+
+
+def test_service_probe_rows_respect_n_valid():
+    _, svc, batch = make_service()
+    prober = svc.enable_probes(k=4, sample_every=1)
+    try:
+        svc.serve_batch(batch, n_valid=2)
+        assert prober.drain(30.0)
+        assert prober.n_rows_scored == 2
+    finally:
+        svc.disable_probes()
+
+
+def test_service_probe_recall_is_one_when_index_fresh():
+    """With candidates_out >= live items per query reachable and an
+    untrained-but-consistent store, the oracle and the index agree on
+    membership for k small vs candidates_out; recall must be high when
+    the index exactly reflects the store and k == 1 (top item is found
+    whenever its cluster is probed). We assert the weaker invariant
+    recall in [0,1] and that a rebuild does not LOWER probe recall."""
+    _, svc, batch = make_service()
+    prober = svc.enable_probes(k=8, sample_every=1, window=256)
+    try:
+        for _ in range(3):
+            svc.serve_batch(batch)
+        assert prober.drain(30.0)
+        before = prober.recall.snapshot()["mean"]
+        svc.rebuild_index()
+        for _ in range(3):
+            svc.serve_batch(batch)
+        assert prober.drain(30.0)
+        after = prober.recall.snapshot()["mean"]
+        assert 0.0 <= before <= 1.0 and 0.0 <= after <= 1.0
+        # same store, same params: the rebuilt index serves the same
+        # candidates, so windowed recall cannot move
+        assert after == pytest.approx(before, abs=1e-9)
+    finally:
+        svc.disable_probes()
+
+
+def test_service_sharded_probe_contribution():
+    _, svc, batch = make_service(n_shards=2)
+    prober = svc.enable_probes(k=8, sample_every=1)
+    try:
+        for _ in range(2):
+            svc.serve_batch(batch)
+        assert prober.drain(30.0)
+        assert prober.n_errors == 0
+        ratios = prober.shard_contribution.ratios()
+        assert ratios.shape == (2,)
+        assert ratios.sum() == pytest.approx(1.0)
+    finally:
+        svc.disable_probes()
+
+
+def test_service_probe_sampling_every_k():
+    _, svc, batch = make_service()
+    prober = svc.enable_probes(k=4, sample_every=3)
+    try:
+        for _ in range(7):
+            svc.serve_batch(batch)
+        assert prober.drain(30.0)
+        assert prober.n_sampled == 3            # serves 0, 3, 6
+    finally:
+        svc.disable_probes()
+
+
+def test_enable_probes_twice_raises():
+    _, svc, _ = make_service()
+    svc.enable_probes(k=2)
+    try:
+        with pytest.raises(RuntimeError):
+            svc.enable_probes(k=2)
+    finally:
+        svc.disable_probes()

@@ -1,0 +1,427 @@
+"""SLO engine suite: spec validation, multi-window burn-rate math over
+gauge / histogram / counter series (virtual time), the lock-exact alert
+log, listener fan-out, the exporter's /slo + /alerts routes and the
+degraded /healthz, service auto-repair wiring, and the
+scrape-during-publish concurrency criterion (every /metrics + /slo
+scrape parses while mutate / rebuild / apply_deltas churn the index,
+and the probe estimators never read a half-published index)."""
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from _obs_svc import make_service
+from test_obs_exporter import _assert_valid_exposition
+from repro.obs.registry import MetricRegistry
+from repro.obs.slo import (AlertEvent, SLOEngine, SLOSpec,
+                           default_service_slos)
+from repro.obs.exporter import start_exporter, to_prometheus_text
+from repro.serving import extract_deltas
+
+
+def _get(url, timeout=10.0):
+    with urllib.request.urlopen(url, timeout=timeout) as r:
+        return r.status, r.read().decode()
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        SLOSpec("x", "m", 1.0, op="eq").validate()
+    with pytest.raises(ValueError):
+        SLOSpec("x", "m", 1.0, stat="p42").validate()
+    with pytest.raises(ValueError):
+        SLOSpec("x", "m", 0.0).validate()
+    with pytest.raises(ValueError):
+        SLOSpec("x", "m", 1.0, windows=(60.0, 30.0)).validate()
+    SLOSpec("x", "m", 1.0).validate()
+
+
+def test_engine_rejects_duplicate_spec():
+    eng = SLOEngine(MetricRegistry())
+    eng.add(SLOSpec("a", "m", 1.0))
+    with pytest.raises(ValueError):
+        eng.add(SLOSpec("a", "m", 2.0))
+
+
+def test_default_service_slos_validate():
+    specs = default_service_slos()
+    assert [s.name for s in specs] == [
+        "svq_serve_p99", "svq_freshness_p99", "svq_balance_entropy",
+        "svq_probe_recall"]
+    for s in specs:
+        s.validate()
+
+
+# ---------------------------------------------------------------------------
+# burn-rate evaluation (virtual time)
+# ---------------------------------------------------------------------------
+
+def test_gauge_floor_fires_and_resolves_multi_window():
+    reg = MetricRegistry()
+    g = reg.gauge("recall")
+    g.set(0.9)
+    eng = SLOEngine(reg, [SLOSpec("floor", "recall", 0.8, op="ge",
+                                  windows=(5.0, 20.0))])
+    assert eng.evaluate(now=0.0) == []
+    g.set(0.5)                                   # violates the floor
+    evs = eng.evaluate(now=10.0)
+    assert [(e.slo, e.state) for e in evs] == [("floor", "firing")]
+    assert eng.burning() == ["floor"]
+    assert eng.evaluate(now=12.0) == []          # still firing: no event
+    g.set(0.95)
+    # worst-in-window: the 0.5 observation must AGE OUT of the short
+    # window before the alert resolves
+    assert eng.evaluate(now=13.0) == []
+    evs = eng.evaluate(now=40.0)
+    assert [(e.slo, e.state) for e in evs] == [("floor", "resolved")]
+    assert eng.burning() == []
+    st = eng.status()["floor"]
+    assert st["burning"] is False and st["since"] is None
+
+
+def test_upper_bound_burn_rate_values():
+    reg = MetricRegistry()
+    g = reg.gauge("p99ish")
+    g.set(0.2)
+    eng = SLOEngine(reg, [SLOSpec("lat", "p99ish", 0.1, op="le",
+                                  windows=(1.0, 2.0))])
+    eng.evaluate(now=0.0)
+    eng.evaluate(now=3.0)
+    st = eng.status()["lat"]
+    assert st["burn_short"] == pytest.approx(2.0)   # value / objective
+    assert st["burning"] is True
+
+
+def test_histogram_interval_percentile_not_lifetime():
+    """A latency regression must surface through the WINDOW percentile
+    even when the lifetime histogram is dominated by old fast samples."""
+    reg = MetricRegistry()
+    h = reg.histogram("lat_seconds")
+    for _ in range(1000):
+        h.record(0.001)
+    eng = SLOEngine(reg, [SLOSpec("p99", "lat_seconds", 0.05, op="le",
+                                  stat="p99", windows=(5.0, 10.0))])
+    eng.evaluate(now=0.0)                        # history base: all fast
+    for _ in range(5):
+        h.record(1.0)                            # regression (<1% lifetime)
+    evs = eng.evaluate(now=6.0)
+    st = eng.status()["p99"]
+    assert st["value_short"] > 0.5               # interval p99 is slow
+    assert [(e.slo, e.state) for e in evs] == [("p99", "firing")]
+    # lifetime p99 would have hidden it (1000 fast vs 5 slow)
+    lifetime = reg.snapshot()["lat_seconds"]["value"]
+    assert lifetime.percentile(0.99) < 0.5
+
+
+def test_histogram_empty_interval_is_no_data():
+    """A window with zero new samples is "no data", never "healthy
+    again" by accident and never a stale lifetime percentile."""
+    reg = MetricRegistry()
+    h = reg.histogram("lat_seconds")
+    eng = SLOEngine(reg, [SLOSpec("p99", "lat_seconds", 0.05, op="le",
+                                  stat="p99", windows=(5.0, 10.0))])
+    eng.evaluate(now=0.0)
+    h.record(1.0)
+    evs = eng.evaluate(now=6.0)                  # the slow interval
+    assert [(e.slo, e.state) for e in evs] == [("p99", "firing")]
+    evs = eng.evaluate(now=30.0)                 # interval has no samples
+    assert [(e.slo, e.state) for e in evs] == [("p99", "resolved")]
+    st = eng.status()["p99"]
+    assert st["value_short"] is None and st["burning"] is False
+
+
+def test_counter_rate_stat():
+    reg = MetricRegistry()
+    c = reg.counter("reqs_total")
+    eng = SLOEngine(reg, [SLOSpec("rate", "reqs_total", 5.0, op="ge",
+                                  stat="rate", windows=(10.0, 10.0))])
+    eng.evaluate(now=0.0)                        # no base yet: no data
+    c.inc(100)
+    eng.evaluate(now=10.0)                       # 10 req/s: healthy
+    assert eng.burning() == []
+    evs = eng.evaluate(now=20.0)                 # 0 req/s over the window
+    assert [(e.slo, e.state) for e in evs] == [("rate", "firing")]
+
+
+def test_missing_series_never_burns():
+    eng = SLOEngine(MetricRegistry(),
+                    [SLOSpec("ghost", "nope", 1.0, windows=(1.0, 2.0))])
+    for t in (0.0, 5.0, 10.0):
+        assert eng.evaluate(now=t) == []
+    st = eng.status()["ghost"]
+    assert st["value_short"] is None and st["burning"] is False
+
+
+# ---------------------------------------------------------------------------
+# alert log + listeners
+# ---------------------------------------------------------------------------
+
+def _flapper(reg):
+    g = reg.gauge("v")
+    eng = SLOEngine(reg, [SLOSpec("flap", "v", 1.0, op="ge",
+                                  windows=(0.5, 1.0))],
+                    alert_capacity=3)
+    return g, eng
+
+
+def test_alert_log_lock_exact_bound():
+    reg = MetricRegistry()
+    g, eng = _flapper(reg)
+    t = 0.0
+    for i in range(4):                           # 8 transitions
+        g.set(0.1)
+        eng.evaluate(now=t); eng.evaluate(now=t + 2.0)    # firing
+        g.set(2.0)
+        eng.evaluate(now=t + 4.0); eng.evaluate(now=t + 9.0)  # resolved
+        t += 20.0
+    assert eng.n_alerts == 8
+    log = eng.alerts()
+    assert len(log) == 3                         # exactly capacity
+    assert eng.n_alerts_dropped == 5
+    assert [e["seq"] for e in log] == [6, 7, 8]  # the newest three
+
+
+def test_listener_receives_events_and_errors_isolated():
+    reg = MetricRegistry()
+    g, eng = _flapper(reg)
+    seen = []
+    eng.add_listener(lambda e: (_ for _ in ()).throw(RuntimeError()))
+    eng.add_listener(seen.append)
+    g.set(0.1)
+    eng.evaluate(now=0.0)
+    eng.evaluate(now=2.0)
+    assert [e.state for e in seen] == ["firing"]
+    assert isinstance(seen[0], AlertEvent)
+    d = seen[0].to_dict()
+    assert d["slo"] == "flap" and d["state"] == "firing"
+
+
+def test_engine_background_loop_start_stop():
+    reg = MetricRegistry()
+    reg.gauge("v").set(5.0)
+    eng = SLOEngine(reg, [SLOSpec("ok", "v", 1.0, op="ge",
+                                  windows=(0.05, 0.1))])
+    eng.start(interval_s=0.01)
+    with pytest.raises(RuntimeError):
+        eng.start(interval_s=0.01)
+    deadline = time.monotonic() + 10.0
+    while eng.n_evals < 3 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    eng.stop()
+    assert eng.n_evals >= 3
+    assert eng.eval_age() < 60.0
+    n = eng.n_evals
+    time.sleep(0.05)
+    assert eng.n_evals == n                      # really stopped
+    eng.stop()                                   # idempotent
+
+
+def test_engine_prometheus_export_parses():
+    reg = MetricRegistry()
+    g, eng = _flapper(reg)
+    eng.register(reg)
+    g.set(0.1)
+    eng.evaluate(now=0.0)
+    eng.evaluate(now=2.0)
+    types, samples = _assert_valid_exposition(to_prometheus_text(reg))
+    assert types["svq_slo_burning"] == "gauge"
+    assert types["svq_slo_burn_rate"] == "gauge"
+    assert types["svq_slo_alerts_total"] == "counter"
+    assert 'svq_slo_burning{slo="flap"} 1.0' in samples
+    assert "svq_slo_evals_total 2.0" in samples
+
+
+# ---------------------------------------------------------------------------
+# exporter routes + degraded healthz
+# ---------------------------------------------------------------------------
+
+def test_slo_routes_and_healthz_degraded():
+    reg = MetricRegistry()
+    g, eng = _flapper(reg)
+    g.set(5.0)
+    eng.evaluate(now=0.0)
+    with start_exporter(reg, port=0, slo=eng,
+                        health_staleness_s=1e9) as ex:
+        status, body = _get(ex.url("/slo"))
+        assert status == 200
+        assert json.loads(body)["flap"]["burning"] is False
+        status, body = _get(ex.url("/alerts"))
+        assert status == 200 and json.loads(body) == []
+        status, body = _get(ex.url("/healthz"))
+        assert status == 200
+        assert json.loads(body)["status"] == "ok"
+        # burn it
+        g.set(0.1)
+        eng.evaluate(now=10.0); eng.evaluate(now=12.0)
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            _get(ex.url("/healthz"))
+        assert exc.value.code == 503
+        payload = json.loads(exc.value.read().decode())
+        assert payload["status"] == "degraded"
+        assert payload["burning"] == ["flap"]
+        assert len(json.loads(_get(ex.url("/alerts"))[1])) == 1
+
+
+def test_healthz_degraded_on_stale_evaluations():
+    reg = MetricRegistry()
+    _, eng = _flapper(reg)
+    eng.evaluate()                               # real clock
+    with start_exporter(reg, port=0, slo=eng,
+                        health_staleness_s=1e-9) as ex:
+        time.sleep(0.01)
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            _get(ex.url("/healthz"))
+        assert exc.value.code == 503
+        assert json.loads(exc.value.read().decode())["stale"] is True
+
+
+def test_healthz_legacy_without_engine():
+    with start_exporter(MetricRegistry(), port=0) as ex:
+        assert _get(ex.url("/healthz")) == (200, "ok\n")
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            _get(ex.url("/slo"))
+        assert exc.value.code == 404
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            _get(ex.url("/alerts"))
+        assert exc.value.code == 404
+
+
+# ---------------------------------------------------------------------------
+# service auto-repair wiring
+# ---------------------------------------------------------------------------
+
+def test_auto_repair_fires_rebuild_with_cooldown():
+    _, svc, batch = make_service()
+    reg = svc.register_metrics()
+    svc.enable_probes(k=8, sample_every=1, registry=reg)
+    try:
+        svc.serve_batch(batch)
+        assert svc.prober.drain(30.0)
+        eng = SLOEngine(reg, [SLOSpec(
+            "recall_floor", "svq_probe_recall", 2.0,  # unreachable floor
+            op="ge", windows=(0.5, 1.0))])
+        svc.attach_auto_repair(eng, slos=["recall_floor"],
+                               cooldown_s=1e9)
+        rebuilds0 = svc.stats.index_rebuilds
+        eng.evaluate(now=0.0)
+        eng.evaluate(now=2.0)                    # firing -> repair
+        assert svc.stats.auto_repairs == 1
+        assert svc.stats.index_rebuilds == rebuilds0 + 1
+        # flap again inside the cooldown: no second repair
+        eng._since.clear()                       # force a re-fire
+        eng.evaluate(now=3.0)
+        assert svc.stats.auto_repairs == 1
+        # counters exported
+        text = to_prometheus_text(reg)
+        assert "svq_auto_repairs_total 1.0" in text
+    finally:
+        svc.disable_probes()
+
+
+def test_auto_repair_filters_unwatched_slos():
+    _, svc, _ = make_service()
+    reg = svc.register_metrics()
+    g = reg.gauge("other")
+    g.set(0.0)
+    eng = SLOEngine(reg, [SLOSpec("other_floor", "other", 1.0, op="ge",
+                                  windows=(0.5, 1.0))])
+    svc.attach_auto_repair(eng, slos=["recall_floor"], cooldown_s=0.0)
+    eng.evaluate(now=0.0)
+    eng.evaluate(now=2.0)
+    assert eng.burning() == ["other_floor"]
+    assert svc.stats.auto_repairs == 0
+
+
+# ---------------------------------------------------------------------------
+# scrape-during-publish concurrency (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def _delta_batch(svc, cfg, rng):
+    """One synthetic write against the service's current store."""
+    import jax.numpy as jnp
+    from repro.core import assignment_store as astore
+    prev = svc.store_snapshot()
+    n = 4
+    ids = jnp.asarray(rng.integers(0, cfg.n_items, n), jnp.int32)
+    new_store = astore.write(
+        prev, ids,
+        jnp.asarray(rng.integers(0, cfg.n_clusters, n), jnp.int32),
+        jnp.asarray(rng.normal(size=(n, cfg.embed_dim)), jnp.float32),
+        jnp.asarray(rng.normal(size=n), jnp.float32))
+    return extract_deltas(prev, new_store, ids)
+
+
+def test_scrape_during_publish_concurrency():
+    """/metrics + /slo stay parseable and the probe estimators stay
+    consistent while serve traffic, immediate delta applies, rebuild
+    publications and in-place mutations all run concurrently."""
+    cfg, svc, batch = make_service(delta_spare=8)
+    reg = svc.register_metrics()
+    prober = svc.enable_probes(k=8, sample_every=1, window=256,
+                               registry=reg)
+    eng = SLOEngine(reg, default_service_slos(
+        serve_p99_s=60.0, recall_floor=1e-6, entropy_floor=1e-6,
+        windows=(0.5, 1.0)))
+    eng.register(reg)
+    svc.serve_batch(batch)                       # compile before threads
+    stop = threading.Event()
+    errors = []
+
+    def guard(fn):
+        def run():
+            try:
+                while not stop.is_set():
+                    fn()
+            except Exception as e:               # pragma: no cover
+                errors.append(e)
+        return run
+
+    rng = np.random.default_rng(7)
+    writers = [
+        threading.Thread(target=guard(lambda: svc.serve_batch(batch))),
+        threading.Thread(target=guard(
+            lambda: svc.apply_deltas(_delta_batch(svc, cfg, rng),
+                                     immediate=True))),
+        threading.Thread(target=guard(lambda: svc.rebuild_index())),
+        threading.Thread(target=guard(lambda: eng.evaluate())),
+    ]
+    with start_exporter(reg, port=0, slo=eng,
+                        health_staleness_s=1e9) as ex:
+        for t in writers:
+            t.start()
+        try:
+            for _ in range(12):                  # scrape WHILE publishing
+                status, body = _get(ex.url("/metrics"))
+                assert status == 200
+                _assert_valid_exposition(body)
+                status, body = _get(ex.url("/slo"))
+                assert status == 200
+                slo_view = json.loads(body)
+                assert set(slo_view) >= {"svq_probe_recall",
+                                         "svq_serve_p99"}
+                _get(ex.url("/alerts"))
+        finally:
+            stop.set()
+            for t in writers:
+                t.join()
+    assert not errors
+    assert prober.drain(60.0)
+    # the consistency criterion: every probe scored against a coherent
+    # (params, store) snapshot — no oracle failure, every estimate sane
+    assert prober.n_errors == 0
+    assert prober.n_scored > 0
+    rec = prober.recall.snapshot()
+    assert 0.0 <= rec["mean"] <= 1.0
+    assert rec["ci_low"] <= rec["mean"] <= rec["ci_high"]
+    ratios = prober.cluster_contribution.ratios()
+    assert ratios.min() >= 0.0
+    assert ratios.sum() == pytest.approx(1.0)
+    svc.disable_probes()
