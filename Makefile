@@ -1,6 +1,6 @@
 # Repo entry points (tier-1 verify + benchmarks).
 .PHONY: test test-fast lint bench bench-serving bench-freshness bench-obs \
-	bench-quality
+	bench-quality bench-federation
 
 test:           ## full tier-1 suite incl. multi-device tier (what CI runs)
 	./scripts/test.sh
@@ -23,6 +23,9 @@ bench-obs:      ## observability overhead table (BENCH_observability.json)
 
 bench-quality:  ## probe-observed drift recovery + SLO closed loop (BENCH_quality.json)
 	PYTHONPATH=src python -m benchmarks.run --only quality
+
+bench-federation: ## federated fan-out recall/latency/contribution (BENCH_federation.json)
+	PYTHONPATH=src python -m benchmarks.run --only federation
 
 lint:           ## ruff when installed, else a compileall syntax gate
 	./scripts/lint.sh

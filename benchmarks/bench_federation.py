@@ -1,0 +1,131 @@
+"""Federation layer: merged recall, fan-out latency, contribution, A/B.
+
+The deployment question behind §4's "replacing all major retrievers":
+what does serving streaming VQ NEXT TO the incumbents cost, and how is
+the final candidate set attributed?  Measured here on one trained model:
+
+  - SVQ-only through the router (the single-backend short-circuit —
+    the bit-identical path) vs the full SVQ+HNSW+brute-force fan-out:
+    recall@K against the stream's true affinity top-K and us/request,
+  - per-retriever contribution ratios of the merged top-K (the IR
+    proxy, now measured by the router's own accounting rather than a
+    post-hoc set intersection),
+  - A/B routing overhead: the hash-assign + resolve cost of a split
+    scenario whose selected arm short-circuits anyway.
+
+Artifacts: BENCH_federation.json.
+"""
+from __future__ import annotations
+
+import json
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import (out_json, sz, timed, trained_retriever)
+from repro.baselines import recall_at_k
+from repro.core.merge_sort import NEG
+from repro.retrieval import backends
+from repro.retrieval.registry import RetrieverRegistry
+from repro.serving import (ABSplit, FederationRouter, RetrievalService,
+                           Scenario)
+
+OUT_JSON = out_json("BENCH_federation.json")
+
+K = sz(100, 20)
+N_QUERY = sz(64, 8)
+HNSW_ITEMS = sz(2000, 300)        # python HNSW graph budget
+
+
+def _subset_corpus(corpus_fn, n_ids):
+    """Corpus view restricted to item ids < n_ids (python-HNSW budget)."""
+    def f():
+        emb, bias, ids = corpus_fn()
+        return emb, np.where(ids < n_ids, bias, NEG), ids
+    return f
+
+
+def _make_router(svc):
+    corpus = backends.corpus_from_service(svc)
+    reg = RetrieverRegistry()
+    reg.register("svq", lambda: backends.SVQServiceRetriever(svc),
+                 description="streaming VQ service (delta path)")
+    reg.register("bf", lambda: backends.BruteForceRetriever(
+        svc.user_embedding, corpus, name="bf"),
+        description="exact MIPS oracle over the live store")
+    reg.register("hnsw", lambda: backends.HNSWRetriever(
+        svc.user_embedding, _subset_corpus(corpus, HNSW_ITEMS),
+        m=8, ef_construction=40, ef_search=128, name="hnsw"),
+        description=f"HNSW graph over the first {HNSW_ITEMS} items")
+    scenarios = [
+        Scenario("svq_only", ("svq",), k=K),
+        Scenario("federated", ("svq", "bf", "hnsw"), k=K),
+        Scenario("ab", ("svq",), k=K,
+                 split=ABSplit("svq", "bf", fraction_b=0.0, salt="x")),
+    ]
+    return reg, FederationRouter(reg, scenarios,
+                                 default_scenario="svq_only")
+
+
+def run() -> list:
+    tr = trained_retriever()
+    svc = RetrievalService(tr.cfg, tr.params, tr.index,
+                           items_per_cluster=64)
+    reg, router = _make_router(svc)
+    rng = np.random.default_rng(7)
+    users = rng.integers(0, tr.cfg.n_users, N_QUERY)
+    truth = tr.stream.true_topk(users, K)
+    batch = dict(
+        user_id=users.astype(np.int32),
+        hist=tr.stream.user_hist[users].astype(np.int32))
+    rows: List = []
+    record = {"k": K, "n_query": N_QUERY, "hnsw_items": HNSW_ITEMS,
+              "rows": {}}
+
+    # -- SVQ-only (single-backend short-circuit) ---------------------------
+    us_svq, out_svq = timed(
+        lambda: router.serve(batch, scenario="svq_only"), n=3)
+    r_svq = recall_at_k(np.asarray(out_svq.ids), truth)
+    rows.append((f"fed/svq_only@{K}", us_svq / N_QUERY,
+                 round(r_svq, 4)))
+
+    # -- full fan-out merge ------------------------------------------------
+    us_fed, out_fed = timed(
+        lambda: router.serve(batch, scenario="federated"), n=3)
+    r_fed = recall_at_k(np.asarray(out_fed.ids), truth)
+    rows.append((f"fed/svq_hnsw_bf@{K}", us_fed / N_QUERY,
+                 round(r_fed, 4)))
+    rows.append((f"fed/fanout_overhead", None,
+                 round(us_fed / max(us_svq, 1e-9), 2)))
+
+    # -- contribution accounting (router-native IR proxy) ------------------
+    snap = router.contribution_snapshot()
+    for name in router.backend_names:
+        rows.append((f"fed/contribution_{name}", None,
+                     round(snap[f"ratio_{name}"], 4)))
+    rows.append(("fed/contribution_entropy_ratio", None,
+                 round(snap["entropy_ratio"], 4)))
+
+    # -- A/B routing overhead ----------------------------------------------
+    # arm A (already in the fan-out) always wins at fraction_b=0, so the
+    # serve path is identical to svq_only and the delta IS the
+    # resolve + hash-assign cost.
+    us_ab, out_ab = timed(lambda: router.serve(batch, scenario="ab"),
+                          n=3)
+    np.testing.assert_array_equal(np.asarray(out_ab.ids),
+                                  np.asarray(out_svq.ids))
+    rows.append(("fed/ab_routing_overhead_pct", None,
+                 round(100.0 * (us_ab - us_svq) / max(us_svq, 1e-9), 2)))
+
+    record["rows"] = {
+        name: {"us_per_req": us, "derived": d} for name, us, d in rows}
+    record["backend_stats"] = reg.stats()
+    with open(OUT_JSON, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -21,6 +21,7 @@ MODULES = [
     ("freshness", "benchmarks.bench_freshness"),      # §3.1 immediacy
     ("observability", "benchmarks.bench_observability"),  # obs overhead
     ("quality", "benchmarks.bench_quality"),          # probes + SLO loop
+    ("federation", "benchmarks.bench_federation"),    # §4 fleet serving
 ]
 
 

@@ -7,10 +7,12 @@ streams for a few hundred steps (CPU-sized config), builds the serving
 index (Appendix-B layout), serves a batch of user requests through the
 two-step pipeline (cluster ranking -> merge sort -> ranking model) and
 through the fused gather+rank path (bit-identical, no candidate slab),
-publishes a live delta, runs the async micro-batched front door, then
+publishes a live delta, runs the async micro-batched front door,
 scrapes the Prometheus endpoint and dumps the sampled request traces as
-Chrome trace-event JSON (open in Perfetto), and finally reports
-Recall@50 against the stream's ground-truth affinity.
+Chrome trace-event JSON (open in Perfetto), federates streaming VQ with
+a brute-force incumbent behind one router (merged fan-out + per-backend
+contribution on /metrics), and finally reports Recall@50 against the
+stream's ground-truth affinity.
 """
 import sys
 
@@ -24,7 +26,10 @@ from repro.core.freq_estimator import hash_ids
 from repro.data import RecsysStream, StreamConfig
 from repro.launch.train import eval_svq_recall, train_svq
 from repro.obs import Tracer, start_exporter
-from repro.serving import RetrievalService, extract_deltas
+from repro.retrieval import (BruteForceRetriever, RetrieverRegistry,
+                             SVQServiceRetriever, corpus_from_service)
+from repro.serving import (FederationRouter, RetrievalService, Scenario,
+                           extract_deltas)
 
 
 def main() -> None:
@@ -138,6 +143,41 @@ def main() -> None:
     spans = sorted({s.name for t in traces for s in t.spans})
     print(f"{len(traces)} sampled traces ({spans}) -> {trace_path} "
           f"(open in Perfetto / chrome://tracing)")
+
+    # federation (retrieval/ + serving/federation.py): run streaming VQ
+    # NEXT TO an exact-MIPS incumbent behind one router — scenario
+    # fan-out, Alg.-1 merged top-k with keep-first dedup, and
+    # per-backend contribution accounting on the same /metrics endpoint
+    print("== federated serving (svq + brute-force) ==")
+    fed_reg = RetrieverRegistry()
+    fed_reg.register("svq", lambda: SVQServiceRetriever(svc))
+    fed_reg.register("bf", lambda: BruteForceRetriever(
+        svc.user_embedding, corpus_from_service(svc), name="bf"))
+    router = FederationRouter(
+        fed_reg,
+        [Scenario("solo", ("svq",), k=32),
+         Scenario("both", ("svq", "bf"), k=32)],
+        default_scenario="both")
+    batch = dict(user_id=users, hist=stream.user_hist[users])
+    direct = svc.serve_batch(batch)                   # post-delta index
+    solo = router.serve(batch, scenario="solo")
+    assert np.array_equal(np.asarray(solo.ids),
+                          direct["item_ids"][:, :32])  # bit-identical path
+    fed = router.serve(batch, scenario="both")
+    mreg = router.register_metrics()        # svq_fed_* series
+    with start_exporter(mreg, port=0) as ex:
+        import urllib.request
+        with urllib.request.urlopen(ex.url("/metrics"), timeout=10) as r:
+            text = r.read().decode()
+    contrib = [ln for ln in text.splitlines()
+               if ln.startswith(("svq_fed_contribution",
+                                 "svq_fed_backend_requests_total"))]
+    print(f"single-backend scenario bit-matches serve_batch; "
+          f"2-way merge sources for user 0: "
+          f"{[fed.source_names[s] for s in np.asarray(fed.sources)[0, :6]]}")
+    print("contribution series scraped from /metrics:")
+    for ln in contrib:
+        print(f"  {ln}")
 
     rep = eval_svq_recall(cfg, params, index, stream, n_users=64, k=50)
     print(f"Recall@50 vs ground truth: {rep['recall']:.3f}")

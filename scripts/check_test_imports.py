@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Import-coverage gate: every retrieval-surface module must be tested.
+
+A module under ``src/repro/baselines/`` or ``src/repro/retrieval/`` is
+COVERED when some file under ``tests/`` imports it by stem in an import
+line that names its package — e.g. ``from repro.baselines import
+brute_force, hnsw`` or ``from repro.retrieval.registry import ...``.
+Package ``__init__`` re-exports do NOT count: the gate exists precisely
+so a new backend module cannot ship behind a blanket ``import
+repro.retrieval`` with zero targeted tests.
+
+Runs from scripts/lint.sh; exits nonzero listing any uncovered module.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+PACKAGES = ("baselines", "retrieval")
+
+
+def modules_of(package: str) -> list[str]:
+    pkg_dir = ROOT / "src" / "repro" / package
+    return sorted(p.stem for p in pkg_dir.glob("*.py")
+                  if p.stem != "__init__")
+
+
+def covered_stems(package: str, test_sources: list[str]) -> set[str]:
+    """Stems referenced by import lines naming ``repro.<package>``."""
+    stems: set[str] = set()
+    # from repro.<pkg> import a, b as c, (multi-line via paren capture)
+    from_re = re.compile(
+        rf"from\s+repro\.{package}\s+import\s+\(?([^)\n]*(?:\n[^)\n]*)*?)\)?$",
+        re.MULTILINE)
+    # from repro.<pkg>.<mod> import ... | import repro.<pkg>.<mod>
+    sub_re = re.compile(rf"(?:from|import)\s+repro\.{package}\.(\w+)")
+    for src in test_sources:
+        for m in sub_re.finditer(src):
+            stems.add(m.group(1))
+        for m in from_re.finditer(src):
+            names = re.split(r"[,\s]+", m.group(1))
+            stems.update(n for n in names if n)
+    return stems
+
+
+def main() -> int:
+    test_sources = [p.read_text()
+                    for p in sorted((ROOT / "tests").glob("*.py"))]
+    failures: list[str] = []
+    for package in PACKAGES:
+        mods = modules_of(package)
+        stems = covered_stems(package, test_sources)
+        for mod in mods:
+            if mod not in stems:
+                failures.append(f"repro.{package}.{mod}")
+    if failures:
+        print("[check_test_imports] modules with no targeted test "
+              "import (add `from repro.<pkg> import <module>` to a "
+              "tests/ file):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    n = sum(len(modules_of(p)) for p in PACKAGES)
+    print(f"[check_test_imports] {n} retrieval-surface modules covered")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,6 +12,9 @@ if [ -n "$tracked_pyc" ]; then
   echo "$tracked_pyc" | head -20
   exit 1
 fi
+# Import-coverage gate: new baselines/ or retrieval/ modules must be
+# imported by name from some tests/ file (scripts/check_test_imports.py)
+python scripts/check_test_imports.py || exit 1
 if command -v ruff >/dev/null 2>&1; then
   echo "[lint] ruff check"
   exec ruff check src benchmarks tests examples scripts

@@ -50,6 +50,7 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
     tests/test_swap_telemetry.py \
     tests/test_deltas.py \
     tests/test_fused_serve.py \
+    tests/test_federation.py \
   || { failures=$((failures + 1)); echo "[tier-2] FAILED"; }
 
 echo "[tier-3] observability tier (8 host-platform devices)"

@@ -1,4 +1,5 @@
-from repro.baselines.brute_force import mips_topk, recall_at_k
+from repro.baselines.brute_force import (mips_topk, order_desc_stable,
+                                         recall_at_k, search_topk)
 from repro.baselines.deep_retrieval import (DRConfig, DRIndex, beam_search,
                                             init_dr, train_dr_step)
 from repro.baselines.hnsw import HNSW, build_hnsw

@@ -2,14 +2,23 @@
 
 Ground truth for every recall benchmark; also the reference scoring path
 of the ``retrieval_cand`` cell (batched dot, never a python loop).
+
+This module also owns the CANONICAL cross-retriever ordering contract
+(``order_desc_stable`` / ``search_topk``): scores descending, ties
+broken by ascending item id.  Every baseline retriever (HNSW, Deep
+Retrieval) and every ``repro.retrieval`` backend adapter returns
+candidates in this order, so the federation merge
+(``serving/federation.py``) can k-way-merge their lists without
+re-sorting.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @partial(jax.jit, static_argnames=("k",))
@@ -20,6 +29,45 @@ def mips_topk(u: jax.Array, items: jax.Array, bias: jax.Array | None,
     if bias is not None:
         scores = scores + bias[None, :]
     return jax.lax.top_k(scores, k)
+
+
+def order_desc_stable(scores: np.ndarray, ids: np.ndarray) -> np.ndarray:
+    """Permutation sorting ``scores`` DESC with ties by ASCENDING id.
+
+    The shared ordering contract of every retriever in the repo (finite
+    scores assumed).  ``np.lexsort`` sorts by the LAST key first, so
+    ``(ids, -scores)`` is primary-descending-score, secondary-ascending
+    -id — deterministic regardless of the input permutation.
+    """
+    scores = np.asarray(scores, np.float64)
+    ids = np.asarray(ids)
+    return np.lexsort((ids, -scores))
+
+
+def search_topk(u: np.ndarray, items: np.ndarray,
+                bias: Optional[np.ndarray], k: int,
+                ids: Optional[np.ndarray] = None
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact MIPS top-k under the cross-retriever ordering contract.
+
+    u: (B, d); items: (N, d); bias: (N,) or None; ``ids`` maps corpus
+    positions to item ids (default ``arange(N)``).  Returns
+    ((B, k) ids int64, (B, k) scores f64), scores descending, ties
+    stable by ascending ID (not position — a tie at the k boundary is
+    resolved toward the lower id even when the corpus is permuted).
+    """
+    vals = np.asarray(u, np.float64) @ np.asarray(items, np.float64).T
+    if bias is not None:
+        vals = vals + np.asarray(bias, np.float64)[None, :]
+    pos_ids = (np.arange(items.shape[0], dtype=np.int64) if ids is None
+               else np.asarray(ids, np.int64))
+    out_ids = np.empty((vals.shape[0], k), np.int64)
+    out_scores = np.empty((vals.shape[0], k), np.float64)
+    for i in range(vals.shape[0]):
+        order = order_desc_stable(vals[i], pos_ids)[:k]
+        out_ids[i] = pos_ids[order]
+        out_scores[i] = vals[i][order]
+    return out_ids, out_scores
 
 
 def recall_at_k(retrieved: jax.Array, truth: jax.Array) -> float:

@@ -16,7 +16,7 @@ JAX model + numpy EM bookkeeping; sized for offline benchmarks.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -146,6 +146,31 @@ class DRIndex:
             if len(out) >= max_items:
                 break
         return np.asarray(out[:max_items], np.int64), np.asarray(counts)
+
+    def retrieve_scored(self, params, u: np.ndarray, n_paths: int,
+                        max_items: int, item_emb: np.ndarray,
+                        item_bias: Optional[np.ndarray] = None
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """Path retrieval + exact re-scoring under the shared contract.
+
+        DR's lattice retrieval yields an UNSCORED candidate set (items
+        of the selected paths, path-coverage order); this scores each
+        candidate exactly (``u . v + bias`` against the supplied item
+        embeddings) and returns (ids, scores) DESC with ties broken by
+        ascending id — ``brute_force.order_desc_stable``'s ordering, so
+        the federation merge can consume DR lists like any other
+        retriever's.  Up to ``max_items`` entries.
+        """
+        from repro.baselines.brute_force import order_desc_stable
+        ids, _ = self.retrieve(params, u, n_paths, max_items)
+        if ids.size == 0:
+            return ids, np.empty((0,), np.float64)
+        scores = np.asarray(item_emb, np.float64)[ids] @ np.asarray(
+            u, np.float64)
+        if item_bias is not None:
+            scores = scores + np.asarray(item_bias, np.float64)[ids]
+        order = order_desc_stable(scores, ids)
+        return ids[order], scores[order]
 
 
 def train_dr_step(params, cfg: DRConfig, u: jax.Array,

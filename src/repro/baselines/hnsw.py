@@ -13,7 +13,7 @@ sized for the offline benchmarks (10^4-10^6 items).
 from __future__ import annotations
 
 import heapq
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -114,6 +114,25 @@ class HNSW:
             ep = self._search_layer(q, ep, 1, l)[:1]
         out = self._search_layer(q, ep, max(ef, k), 0)
         return np.asarray(out[:k], np.int64)
+
+    def search_scored(self, q: np.ndarray, k: int, ef: int = 64
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """Beam search returning (ids, scores) under the shared contract.
+
+        Scores are the similarity (inner product, or negated L2 so
+        "bigger is better" holds for both metrics), DESCENDING with ties
+        broken by ascending id — the same ordering
+        ``brute_force.order_desc_stable`` defines, so the federation
+        merge can consume HNSW lists without re-sorting.  Up to ``k``
+        entries (fewer when the graph holds fewer reachable nodes).
+        """
+        from repro.baselines.brute_force import order_desc_stable
+        cand = self.search(q, k, ef=ef)
+        if cand.size == 0:
+            return cand, np.empty((0,), np.float64)
+        scores = -self._dist(q, cand).astype(np.float64)
+        order = order_desc_stable(scores, cand)
+        return cand[order], scores[order]
 
     @property
     def touch_count(self) -> int:

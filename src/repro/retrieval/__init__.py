@@ -1,0 +1,20 @@
+"""Unified retrieval surface: protocol, backend adapters, registry.
+
+  api.py       the ``Retriever`` protocol + typed ``Candidates`` result
+  backends.py  adapters: streaming VQ (service / pinned index),
+               brute-force MIPS, HNSW, Deep Retrieval
+  registry.py  lazily-instantiated named backends with warm/evict
+               lifecycle and generation tracking
+
+The federation router that serves scenarios across these backends lives
+one layer up, in ``repro.serving.federation``.
+"""
+from repro.retrieval.api import (Candidates, DeltasUnsupported,
+                                 INVALID_ID, INVALID_SOURCE, Retriever,
+                                 pad_candidates)
+from repro.retrieval.backends import (BruteForceRetriever,
+                                      DeepRetrievalRetriever,
+                                      HNSWRetriever, SVQIndexRetriever,
+                                      SVQServiceRetriever,
+                                      corpus_from_service)
+from repro.retrieval.registry import RetrieverRegistry

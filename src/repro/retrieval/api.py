@@ -1,0 +1,210 @@
+"""The unified ``Retriever`` protocol: one call surface for every index.
+
+The paper deploys streaming VQ as the replacement for *all major
+retrievers* at once — production serves many retrieval paradigms side by
+side behind one facade.  This repo grew four of them (brute-force MIPS,
+streaming VQ, HNSW, Deep Retrieval) with four incompatible call
+signatures; this module is the common contract they all adapt to
+(``retrieval/backends.py``) so the registry (``retrieval/registry.py``)
+can construct them lazily and the federation router
+(``serving/federation.py``) can fan out, merge and contribution-account
+across them.
+
+The contract has two halves:
+
+  ``Candidates``
+    the typed result: (B, k) ids / scores / validity plus per-candidate
+    SOURCE labels (which backend supplied each slot — the raw material
+    of MERGE-style contribution accounting).  Rows are score-DESCENDING
+    with every valid lane a PREFIX (invalid lanes trail, score
+    ``NEG``); baseline backends additionally break score ties by
+    ascending id (``baselines.brute_force.order_desc_stable``).  The
+    streaming-VQ adapters wrap their serve output VERBATIM (tie order =
+    stable argsort position) so the protocol never perturbs the
+    bit-exact serve contract.
+
+  ``Retriever``
+    build / serve / apply_deltas / stats.  ``build`` is idempotent and
+    does the heavy lifting (HNSW graph inserts, DR inverted index) so
+    the registry can construct cheaply and warm lazily; ``serve`` is
+    the only abstract method; ``apply_deltas`` raises
+    ``DeltasUnsupported`` unless the backend really has an incremental
+    path (streaming VQ does — that asymmetry IS the paper's point).
+"""
+from __future__ import annotations
+
+import abc
+import threading
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.core.merge_sort import NEG
+
+INVALID_ID = -1
+INVALID_SOURCE = -1
+
+
+class Candidates(NamedTuple):
+    """One serve result: (B, k) candidates with per-slot source labels.
+
+    ``sources`` indexes into ``source_names`` (INVALID_SOURCE on
+    invalid lanes).  A single-backend result has ``source_names ==
+    (name,)`` and ``sources == 0`` wherever valid; the federation merge
+    produces mixed rows.  Invariants (``check()``): per row, valid
+    lanes form a prefix and scores are non-increasing over it.
+    """
+    ids: np.ndarray                 # (B, k) item ids
+    scores: np.ndarray              # (B, k) float, NEG where invalid
+    valid: np.ndarray               # (B, k) bool
+    sources: np.ndarray             # (B, k) int16 -> source_names
+    source_names: Tuple[str, ...]
+
+    @property
+    def batch(self) -> int:
+        return int(self.ids.shape[0])
+
+    @property
+    def k(self) -> int:
+        return int(self.ids.shape[1])
+
+    @staticmethod
+    def single(name: str, ids: np.ndarray, scores: np.ndarray,
+               valid: Optional[np.ndarray] = None) -> "Candidates":
+        """Wrap one backend's (B, k) output VERBATIM (no normalizing).
+
+        ``ids``/``scores`` are adopted as-is — including whatever the
+        backend left in invalid lanes — so wrapping a bit-exact serve
+        path stays bit-exact.  ``valid`` defaults to ``ids >= 0``.
+        """
+        ids = np.asarray(ids)
+        scores = np.asarray(scores)
+        valid = (ids >= 0) if valid is None else np.asarray(valid, bool)
+        src = np.where(valid, np.int16(0), np.int16(INVALID_SOURCE))
+        return Candidates(ids=ids, scores=scores, valid=valid,
+                          sources=src.astype(np.int16),
+                          source_names=(name,))
+
+    def check(self) -> "Candidates":
+        """Assert the ordering contract (tests / debug; O(B*k))."""
+        v = np.asarray(self.valid, bool)
+        if v.shape[1] > 1:
+            # valid lanes are a prefix ...
+            assert not (~v[:, :-1] & v[:, 1:]).any(), \
+                "valid lanes must be a prefix"
+            # ... and scores never increase inside it
+            s = np.asarray(self.scores, np.float64)
+            both = v[:, :-1] & v[:, 1:]
+            assert (s[:, :-1][both] >= s[:, 1:][both]).all(), \
+                "scores must be non-increasing over valid lanes"
+        return self
+
+    def contribution(self, n_rows: Optional[int] = None) -> np.ndarray:
+        """Per-source count of valid candidates over the leading
+        ``n_rows`` rows (all rows when None) — the federation router
+        folds these into its windowed contribution ratios."""
+        rows = self.batch if n_rows is None else min(n_rows, self.batch)
+        src = np.asarray(self.sources[:rows])
+        mask = np.asarray(self.valid[:rows], bool) & (src >= 0)
+        return np.bincount(src[mask].ravel(),
+                           minlength=len(self.source_names))
+
+
+def pad_candidates(name: str, ids_rows, scores_rows, k: int,
+                   id_dtype=np.int64) -> Candidates:
+    """Assemble per-row ragged (ids, scores) lists into a Candidates.
+
+    The ragged-output backends (HNSW beam search, DR path retrieval)
+    return per-query lists of varying length; this pads each row to
+    ``k`` with (INVALID_ID, NEG, invalid) trailing lanes.
+    """
+    b = len(ids_rows)
+    ids = np.full((b, k), INVALID_ID, id_dtype)
+    scores = np.full((b, k), NEG, np.float64)
+    valid = np.zeros((b, k), bool)
+    for i, (row_ids, row_scores) in enumerate(zip(ids_rows, scores_rows)):
+        n = min(len(row_ids), k)
+        ids[i, :n] = np.asarray(row_ids)[:n]
+        scores[i, :n] = np.asarray(row_scores)[:n]
+        valid[i, :n] = True
+    return Candidates.single(name, ids, scores, valid)
+
+
+class DeltasUnsupported(NotImplementedError):
+    """This backend has no incremental index path (offline rebuild
+    only) — the index-immediacy gap the paper's Table 1 quantifies."""
+
+
+class Retriever(abc.ABC):
+    """Common retriever surface: build / serve / apply_deltas / stats.
+
+    Subclasses are constructed CHEAPLY (the registry may instantiate
+    and never serve); ``build()`` performs the heavy index construction
+    and must be idempotent — ``serve`` calls it on first use.  Stats
+    are flat float dicts so the registry can export them as gauges
+    without knowing backend internals; ``generation`` is the
+    conventional key for index-generation tracking (the streaming-VQ
+    backend reports its ``DoubleBufferedIndex`` epoch).
+    """
+
+    #: backends with a real-time delta path override this
+    supports_deltas: bool = False
+
+    def __init__(self, name: str):
+        self.name = name
+        self._lock = threading.Lock()
+        self._built = False
+        self.n_serves = 0
+        self.n_rows = 0
+
+    # -- lifecycle ---------------------------------------------------------
+    def build(self) -> None:
+        """Construct the heavy index state (idempotent, thread-safe)."""
+        with self._lock:
+            if self._built:
+                return
+            self._build()
+            self._built = True
+
+    def _build(self) -> None:                 # pragma: no cover - default
+        """Subclass hook; default backends need no heavy build."""
+
+    @property
+    def built(self) -> bool:
+        return self._built
+
+    def close(self) -> None:
+        """Release resources (registry eviction hook); default no-op."""
+
+    # -- serving -----------------------------------------------------------
+    @abc.abstractmethod
+    def serve(self, batch: Dict[str, np.ndarray], k: int, task: int = 0,
+              n_valid: Optional[int] = None,
+              span_sink=None) -> Candidates:
+        """Retrieve top-``k`` candidates for a request batch.
+
+        ``batch`` is the serving-side request dict (``user_id`` +
+        ``hist`` rows); ``n_valid`` marks how many leading rows are
+        real (micro-batcher padding); ``span_sink`` (a list) lets
+        tracing-aware backends append per-stage spans.
+        """
+
+    def _count(self, batch: Dict[str, np.ndarray],
+               n_valid: Optional[int]) -> None:
+        rows = len(batch["user_id"]) if n_valid is None else n_valid
+        with self._lock:
+            self.n_serves += 1
+            self.n_rows += rows
+
+    # -- incremental path --------------------------------------------------
+    def apply_deltas(self, delta_batch, immediate: bool = True) -> int:
+        raise DeltasUnsupported(
+            f"retriever {self.name!r} has no incremental index path")
+
+    # -- observability -----------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        """Flat float view; subclasses merge their own keys in."""
+        with self._lock:
+            return dict(n_serves=float(self.n_serves),
+                        n_rows=float(self.n_rows),
+                        built=float(self._built))

@@ -1,0 +1,268 @@
+"""``Retriever`` adapters: every index in the repo behind one protocol.
+
+Each adapter is a thin shim from a concrete index's native call surface
+to ``api.Retriever``; none of them changes numerics:
+
+  ``SVQServiceRetriever``
+    wraps a live ``RetrievalService`` VERBATIM — ``serve`` forwards to
+    ``serve_batch`` (span_sink / n_valid included) and adopts its
+    ``item_ids`` / ``scores`` arrays unmodified (truncated to the first
+    ``k`` columns, which ``serve_batch`` already orders score-first),
+    so a single-backend federated serve is bit-identical to calling
+    the service directly.  The only backend with a real delta path.
+
+  ``SVQIndexRetriever``
+    the same serve numerics without the service machinery (direct
+    ``core.retriever.serve`` over a pinned (params, state, index)) —
+    for tests and offline evaluation where swap/telemetry threads are
+    unwanted.
+
+  ``BruteForceRetriever``
+    exact MIPS oracle over a corpus snapshot, scored via
+    ``baselines.brute_force.search_topk`` (the canonical ordering
+    contract).  ``corpus_from_service`` builds its corpus from the
+    service's live store with empty slots masked to ``NEG`` — the same
+    masking the shadow-probe oracle applies.
+
+  ``HNSWRetriever`` / ``DeepRetrievalRetriever``
+    the offline-rebuild baselines; graph/lattice construction happens
+    in ``_build`` (lazy, on first registry ``get``), serving pads
+    per-row ragged results to (B, k) under the shared ordering.
+
+All non-SVQ backends embed users through one shared ``embed_fn``
+(conventionally ``RetrievalService.user_embedding``) so every
+federated arm scores against the identical user representation.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.baselines import brute_force
+from repro.baselines.deep_retrieval import DRConfig, DRIndex
+from repro.baselines.hnsw import build_hnsw
+from repro.core.merge_sort import NEG
+from repro.retrieval.api import Candidates, Retriever, pad_candidates
+
+#: embed_fn: (batch, task) -> (B, dim) user embeddings
+EmbedFn = Callable[[Dict[str, np.ndarray], int], np.ndarray]
+#: corpus_fn: () -> (item_emb (N, d), bias (N,) or None, ids (N,))
+CorpusFn = Callable[[], Tuple[np.ndarray, Optional[np.ndarray],
+                              np.ndarray]]
+
+
+class SVQServiceRetriever(Retriever):
+    """The streaming-VQ service as a federation backend (verbatim wrap)."""
+
+    supports_deltas = True
+
+    def __init__(self, service, name: str = "svq"):
+        super().__init__(name)
+        self.service = service
+        self._built = True               # the service built its index
+
+    def serve(self, batch, k, task=0, n_valid=None,
+              span_sink=None) -> Candidates:
+        out = self.service.serve_batch(batch, task=task, n_valid=n_valid,
+                                       span_sink=span_sink)
+        self._count(batch, n_valid)
+        ids = out["item_ids"][:, :k]
+        scores = out["scores"][:, :k]
+        # invalid lanes carry score NEG but a garbage (clipped) id after
+        # the serve-side argsort — validity must come from the score
+        # sentinel, and ids/scores stay untouched (bit-identity).
+        return Candidates.single(self.name, ids, scores,
+                                 valid=scores > NEG / 2)
+
+    def apply_deltas(self, delta_batch, immediate: bool = True) -> int:
+        return self.service.apply_deltas(delta_batch, immediate=immediate)
+
+    def stats(self) -> Dict[str, float]:
+        s = super().stats()
+        s["generation"] = float(self.service.index_generation.epoch)
+        s["delta_version"] = float(
+            self.service.index_generation.delta_version)
+        return s
+
+
+class SVQIndexRetriever(Retriever):
+    """Streaming-VQ serve over a pinned (params, state, index) triple."""
+
+    def __init__(self, cfg, params, index_state, index,
+                 items_per_cluster: int = 256, use_kernel: bool = False,
+                 fused: bool = False, name: str = "svq_index"):
+        super().__init__(name)
+        import jax
+        from repro.core import retriever as retriever_lib
+
+        def _serve(p, s, idx, b, task):
+            return retriever_lib.serve(
+                p, s, cfg, idx, b, items_per_cluster=items_per_cluster,
+                task=task, use_kernel=use_kernel, fused=fused)
+
+        self._serve_jit = jax.jit(_serve, static_argnames=("task",))
+        self._args = (params, index_state, index)
+        self._built = True
+
+    def serve(self, batch, k, task=0, n_valid=None,
+              span_sink=None) -> Candidates:
+        import jax.numpy as jnp
+        params, state, index = self._args
+        jbatch = {key: jnp.asarray(v) for key, v in batch.items()}
+        out = self._serve_jit(params, state, index, jbatch, task=task)
+        self._count(batch, n_valid)
+        ids = np.asarray(out["item_ids"])[:, :k]
+        scores = np.asarray(out["scores"])[:, :k]
+        return Candidates.single(self.name, ids, scores,
+                                 valid=scores > NEG / 2)
+
+
+def corpus_from_service(service) -> CorpusFn:
+    """Corpus view of a service's live store (probe-oracle masking).
+
+    Empty slots (``cluster < 0``) keep their zero embeddings but get
+    ``NEG`` bias so they can never enter a top-k — identical to the
+    shadow-probe oracle's masking, which makes a BruteForceRetriever
+    over this corpus the federation-visible exact baseline.
+    """
+    def corpus() -> Tuple[np.ndarray, Optional[np.ndarray], np.ndarray]:
+        store = service.store_snapshot()
+        emb = np.asarray(store.item_emb)
+        cluster = np.asarray(store.cluster)
+        bias = np.where(cluster >= 0, np.asarray(store.item_bias), NEG)
+        return emb, bias, np.asarray(store.item_id, np.int64)
+    return corpus
+
+
+class BruteForceRetriever(Retriever):
+    """Exact MIPS over a corpus snapshot — the recall ceiling backend."""
+
+    def __init__(self, embed_fn: EmbedFn, corpus_fn: CorpusFn,
+                 name: str = "brute_force"):
+        super().__init__(name)
+        self.embed_fn = embed_fn
+        self.corpus_fn = corpus_fn
+        self._corpus: Optional[Tuple] = None
+
+    def _build(self) -> None:
+        self._corpus = self.corpus_fn()
+
+    def refresh(self) -> None:
+        """Re-snapshot the corpus (no incremental path: full refresh)."""
+        self._corpus = self.corpus_fn()
+
+    def serve(self, batch, k, task=0, n_valid=None,
+              span_sink=None) -> Candidates:
+        self.build()
+        emb, bias, ids = self._corpus
+        u = self.embed_fn(batch, task)
+        self._count(batch, n_valid)
+        out_ids, out_scores = brute_force.search_topk(
+            u, emb, bias, min(k, emb.shape[0]), ids=ids)
+        if out_ids.shape[1] < k:
+            return pad_candidates(self.name, list(out_ids),
+                                  list(out_scores), k)
+        # real-score lanes only: NEG-masked empty slots may fill the
+        # tail when the corpus has fewer live items than k
+        return Candidates.single(self.name, out_ids, out_scores,
+                                 valid=out_scores > NEG / 2)
+
+    def stats(self) -> Dict[str, float]:
+        s = super().stats()
+        if self._corpus is not None:
+            s["corpus_size"] = float(self._corpus[0].shape[0])
+        return s
+
+
+class HNSWRetriever(Retriever):
+    """HNSW graph baseline; graph inserts happen lazily in ``build``."""
+
+    def __init__(self, embed_fn: EmbedFn, corpus_fn: CorpusFn,
+                 m: int = 16, ef_construction: int = 100,
+                 ef_search: int = 64, name: str = "hnsw"):
+        super().__init__(name)
+        self.embed_fn = embed_fn
+        self.corpus_fn = corpus_fn
+        self.m = m
+        self.ef_construction = ef_construction
+        self.ef_search = ef_search
+        self._index = None
+        self._ids: Optional[np.ndarray] = None
+
+    def _build(self) -> None:
+        emb, bias, ids = self.corpus_fn()
+        live = (np.asarray(bias) > NEG / 2 if bias is not None
+                else np.ones(emb.shape[0], bool))
+        # the graph is metric-pure (inner product); NEG-masked empty
+        # slots are simply excluded rather than bias-masked
+        self._index = build_hnsw(np.asarray(emb)[live], m=self.m,
+                                 ef_construction=self.ef_construction)
+        self._ids = np.asarray(ids, np.int64)[live]
+
+    def serve(self, batch, k, task=0, n_valid=None,
+              span_sink=None) -> Candidates:
+        self.build()
+        u = self.embed_fn(batch, task)
+        self._count(batch, n_valid)
+        ids_rows, score_rows = [], []
+        for q in np.asarray(u):
+            pos, scores = self._index.search_scored(
+                q, k, ef=max(self.ef_search, k))
+            row_ids = self._ids[pos]
+            # graph positions -> item ids can permute equal-score ties;
+            # re-apply the contract over the final id space
+            order = brute_force.order_desc_stable(scores, row_ids)
+            ids_rows.append(row_ids[order])
+            score_rows.append(scores[order])
+        return pad_candidates(self.name, ids_rows, score_rows, k)
+
+    def stats(self) -> Dict[str, float]:
+        s = super().stats()
+        if self._index is not None:
+            s["graph_size"] = float(len(self._index.vectors))
+            s["touch_count"] = float(self._index.touch_count)
+        return s
+
+
+class DeepRetrievalRetriever(Retriever):
+    """Deep Retrieval lattice baseline with exact re-scoring."""
+
+    def __init__(self, embed_fn: EmbedFn, corpus_fn: CorpusFn,
+                 dr_params, dr_index: DRIndex, cfg: DRConfig,
+                 n_paths: int = 8, name: str = "deep_retrieval"):
+        super().__init__(name)
+        self.embed_fn = embed_fn
+        self.corpus_fn = corpus_fn
+        self.dr_params = dr_params
+        self.dr_index = dr_index
+        self.cfg = cfg
+        self.n_paths = n_paths
+        self._corpus: Optional[Tuple] = None
+
+    def _build(self) -> None:
+        self._corpus = self.corpus_fn()
+
+    def serve(self, batch, k, task=0, n_valid=None,
+              span_sink=None) -> Candidates:
+        self.build()
+        emb, bias, ids = self._corpus
+        u = self.embed_fn(batch, task)
+        self._count(batch, n_valid)
+        # DR's inverted lists are keyed by corpus POSITION; map back to
+        # item ids after scoring
+        pos_bias = None if bias is None else np.asarray(bias)
+        ids_rows, score_rows = [], []
+        for q in np.asarray(u):
+            pos, scores = self.dr_index.retrieve_scored(
+                self.dr_params, q, self.n_paths, k, np.asarray(emb),
+                item_bias=pos_bias)
+            # NEG-bias-masked (empty) corpus slots can land on DR paths;
+            # they are not retrievable items
+            keep = scores > NEG / 2
+            pos, scores = pos[keep], scores[keep]
+            row_ids = np.asarray(ids, np.int64)[pos]
+            order = brute_force.order_desc_stable(scores, row_ids)
+            ids_rows.append(row_ids[order])
+            score_rows.append(scores[order])
+        return pad_candidates(self.name, ids_rows, score_rows, k)

@@ -1,0 +1,178 @@
+"""Lazily-instantiated retriever registry with per-backend lifecycle.
+
+Production serves MANY named retrievers, most of them cold at any given
+moment; the registry maps names to factory specs and constructs a
+backend the first time a scenario routes to it (DeepVideoAnalytics'
+``Retrievers`` pattern: class-level cache, on-first-use ``load``).
+
+Lifecycle per name:
+
+  ``register``  declare the spec (factory + description), no work done
+  ``get``       lazy double-checked construction + ``build()`` — the
+                heavy step (HNSW inserts, corpus snapshot) happens here,
+                once, under a per-name lock so concurrent scenarios
+                racing to the same cold backend build it exactly once
+  ``warm``      eager ``get`` for a set of names (deploy-time prefetch)
+  ``evict``     close + drop the live instance; the SPEC stays, the next
+                ``get`` reconstructs (how a stale HNSW graph or corpus
+                snapshot is refreshed — rebuild-by-eviction, the offline
+                analog of streaming VQ's in-place delta path)
+
+Generation tracking rides each backend's ``stats()["generation"]``
+(the streaming-VQ backend reports its ``DoubleBufferedIndex`` epoch;
+offline backends report their build counter), exported with liveness
+and build counters through ``register_metrics``.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.obs import registry as registry_lib
+from repro.retrieval.api import Retriever
+
+Factory = Callable[[], Retriever]
+
+
+class _Spec:
+    __slots__ = ("factory", "description", "builds")
+
+    def __init__(self, factory: Factory, description: str):
+        self.factory = factory
+        self.description = description
+        self.builds = 0                     # lifetime constructions
+
+
+class RetrieverRegistry:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._specs: Dict[str, _Spec] = {}
+        self._live: Dict[str, Retriever] = {}
+        self._name_locks: Dict[str, threading.Lock] = {}
+
+    # -- spec management ---------------------------------------------------
+    def register(self, name: str, factory: Factory, description: str = "",
+                 replace: bool = False) -> None:
+        """Declare a named backend; construction is deferred to ``get``.
+
+        Re-registering a live name requires ``replace=True`` and evicts
+        the existing instance (the new factory takes effect on the next
+        ``get``).
+        """
+        with self._lock:
+            if name in self._specs and not replace:
+                raise ValueError(f"retriever {name!r} already registered")
+            self._specs[name] = _Spec(factory, description)
+            self._name_locks.setdefault(name, threading.Lock())
+        if replace:
+            self.evict(name)
+
+    def registered(self) -> List[str]:
+        with self._lock:
+            return sorted(self._specs)
+
+    def live(self) -> List[str]:
+        with self._lock:
+            return sorted(self._live)
+
+    def describe(self) -> List[Tuple[str, str, bool]]:
+        """(name, description, is_live) rows for ops tooling."""
+        with self._lock:
+            return [(n, s.description, n in self._live)
+                    for n, s in sorted(self._specs.items())]
+
+    # -- lifecycle ---------------------------------------------------------
+    def get(self, name: str) -> Retriever:
+        """The live backend for ``name``, constructing+building on first
+        use.  Double-checked under a per-name lock: parallel cold
+        ``get``s on DIFFERENT names build concurrently, on the SAME
+        name build once."""
+        with self._lock:
+            inst = self._live.get(name)
+            if inst is not None:
+                return inst
+            spec = self._specs.get(name)
+            if spec is None:
+                raise KeyError(f"unknown retriever {name!r}; registered: "
+                               f"{sorted(self._specs)}")
+            name_lock = self._name_locks[name]
+        with name_lock:
+            with self._lock:                # re-check: we may have lost
+                inst = self._live.get(name)
+            if inst is not None:
+                return inst
+            inst = spec.factory()
+            inst.build()
+            with self._lock:
+                spec.builds += 1
+                self._live[name] = inst
+            return inst
+
+    def warm(self, *names: str) -> None:
+        """Eagerly construct the given backends (all when none given)."""
+        for name in (names or self.registered()):
+            self.get(name)
+
+    def evict(self, name: str) -> bool:
+        """Close + drop the live instance; spec survives.  Returns
+        whether an instance was actually dropped."""
+        with self._lock:
+            inst = self._live.pop(name, None)
+        if inst is not None:
+            inst.close()
+            return True
+        return False
+
+    def close(self) -> None:
+        for name in self.live():
+            self.evict(name)
+
+    # -- observability -----------------------------------------------------
+    def generation(self, name: str) -> Optional[float]:
+        """The live backend's reported index generation (None if cold
+        or the backend has no generation notion)."""
+        with self._lock:
+            inst = self._live.get(name)
+        if inst is None:
+            return None
+        return inst.stats().get("generation")
+
+    def stats(self) -> Dict[str, Dict[str, float]]:
+        with self._lock:
+            live = dict(self._live)
+        return {name: inst.stats() for name, inst in live.items()}
+
+    def register_metrics(self, registry: Optional[
+            registry_lib.MetricRegistry] = None,
+            namespace: str = "svq_fed") -> registry_lib.MetricRegistry:
+        """Liveness / build-count / generation series per backend."""
+        reg = registry if registry is not None \
+            else registry_lib.MetricRegistry()
+
+        def collect() -> List[registry_lib.Family]:
+            with self._lock:
+                rows = [(n, s.builds, n in self._live)
+                        for n, s in sorted(self._specs.items())]
+                live = dict(self._live)
+            gens = []
+            for name, inst in sorted(live.items()):
+                gen = inst.stats().get("generation")
+                if gen is not None:
+                    gens.append(({"backend": name}, float(gen)))
+            return [
+                registry_lib.Family(
+                    f"{namespace}_backend_live", "gauge",
+                    "1 when the named backend is constructed and live",
+                    [({"backend": n}, float(is_live))
+                     for n, _, is_live in rows]),
+                registry_lib.Family(
+                    f"{namespace}_backend_builds_total", "counter",
+                    "lifetime constructions of the named backend",
+                    [({"backend": n}, float(b)) for n, b, _ in rows]),
+                registry_lib.Family(
+                    f"{namespace}_backend_generation", "gauge",
+                    "live backend's reported index generation", gens),
+            ]
+
+        reg.register_collector(collect)
+        return reg

@@ -22,6 +22,11 @@ File -> paper-section map:
                 completion of the §3.1 "index immediacy" property.
   telemetry.py  Lock-exact counters + log-spaced latency histograms:
                 makes the serve_p99 shape of Appendix B benchmarkable.
+  federation.py Multi-scenario retrieval federation: per-task routing,
+                deterministic A/B splits, k-way merged fan-out over the
+                ``repro.retrieval`` registry with per-backend
+                contribution accounting — the "replacing all major
+                retrievers" deployment layer of §4.
 
 The observability layer (``repro.obs``: request tracing, metric
 registry, index-health gauges, Prometheus exporter) sits BELOW this
@@ -30,6 +35,10 @@ package in the import graph; wire a service into it via
 ``service.register_metrics()`` + ``obs.start_exporter(registry)``.
 """
 from repro.serving.batcher import MicroBatcher, ServeFuture
+from repro.serving.federation import (ABSplit, FederationRouter,
+                                      Scenario, assign_arm,
+                                      default_federation_slos,
+                                      federated_merge)
 from repro.serving.deltas import (DeltaBatch, DeltaLog,
                                   SpareCapacityExceeded, apply_deltas,
                                   apply_deltas_batched,

@@ -54,7 +54,8 @@ class RetrievalService:
                  fused: bool = False,
                  n_shards: Optional[int] = None, mesh=None,
                  delta_spare: int = 0,
-                 tracer: Optional[trace_lib.Tracer] = None):
+                 tracer: Optional[trace_lib.Tracer] = None,
+                 rank_parallel: bool = False):
         self.cfg = cfg
         self.items_per_cluster = items_per_cluster
         self.use_kernel = use_kernel
@@ -67,6 +68,10 @@ class RetrievalService:
         # publication (serving/deltas.py) appends into.  0 = dense layout,
         # every immediate apply falls back to a forced compaction rebuild.
         self.delta_spare = delta_spare
+        # batch-parallel replicated ranking (sharding.py stage 4):
+        # tolerance-contract opt-in, sequential/replicated stays the
+        # oracle.  Only meaningful with n_shards + mesh.
+        self.rank_parallel = rank_parallel
         # request tracer (obs/trace.py): sampled requests run the STAGED
         # serve path (three jit calls with a sync between stages) so
         # their spans carry real per-stage wall times; unsampled requests
@@ -92,7 +97,8 @@ class RetrievalService:
                 return sharding_lib.sharded_serve(
                     p, s, cfg, idx, b,
                     items_per_cluster=items_per_cluster, task=task,
-                    use_kernel=use_kernel, fused=fused, mesh=mesh)
+                    use_kernel=use_kernel, fused=fused, mesh=mesh,
+                    rank_parallel=rank_parallel)
 
             def _stage_rank(p, s, idx, b, task):
                 return sharding_lib.sharded_stage_rank(
@@ -106,7 +112,8 @@ class RetrievalService:
 
             def _stage_ranking(p, s1, s2, task):
                 return sharding_lib.sharded_stage_ranking(
-                    p, cfg, s1, s2, task=task, mesh=mesh)
+                    p, cfg, s1, s2, task=task, mesh=mesh,
+                    rank_parallel=rank_parallel)
         else:
             def _serve(p, s, idx, b, task):
                 return retriever.serve(
@@ -145,6 +152,20 @@ class RetrievalService:
 
         self._user_emb_jit = jax.jit(_user_emb, static_argnames=("task",))
         self.prober: Optional[quality_lib.QualityProber] = None
+
+    def user_embedding(self, batch: Dict[str, np.ndarray],
+                       task: int = 0) -> np.ndarray:
+        """(B, dim) user-tower embedding for a request batch.
+
+        The same tiny jit the shadow-probe oracle uses; this is the
+        standard ``embed_fn`` the non-SVQ retrieval backends
+        (``repro.retrieval.backends``) score queries with, so every
+        federated backend sees the identical user representation.
+        """
+        with self._lock:
+            params = self._params
+        jbatch = {k: jnp.asarray(v) for k, v in batch.items()}
+        return np.asarray(self._user_emb_jit(params, jbatch, task=task))
 
     # -- index lifecycle (swap.py) -----------------------------------------
     def _build_index(self):

@@ -333,28 +333,40 @@ def _route_candidate_ids(sidx: ShardedServingIndex, flat: jax.Array,
 def sharded_stage_ranking(params: Params, cfg: SVQConfig,
                           s1: Dict[str, jax.Array],
                           s2: Dict[str, jax.Array], task: int = 0,
-                          mesh: Optional[Mesh] = None
+                          mesh: Optional[Mesh] = None,
+                          rank_parallel: bool = False
                           ) -> Dict[str, jax.Array]:
     """Stage 4b: the closing ranking step over merged candidates.
 
-    Ranking-step inputs are pinned replicated: a batch-partitioned MLP
-    forward is NOT bitwise stable (gemm remainder panels reorder the
-    per-row accumulation), and the bit-exact contract vs the
-    single-device serve matters more here than parallelizing the small
-    "VQ Two-tower" head.  Batch-parallel ranking (tolerance-based
-    parity) is a ROADMAP follow-up.
+    Default (``rank_parallel=False``): ranking-step inputs are pinned
+    replicated — a batch-partitioned MLP forward is NOT bitwise stable
+    (gemm remainder panels reorder the per-row accumulation), and the
+    bit-exact contract vs the single-device serve wins by default.
+
+    ``rank_parallel=True`` batch-partitions the ranking MLP over the
+    shard axis (each device ranks B/D rows of the merged candidate
+    set) under a TOLERANCE contract instead of the bit-exact one:
+    per-row scores may differ from the replicated oracle by a few ulps
+    of f32 (remainder-panel reordering inside the gemm), so the
+    candidate-id SET per row is identical and id-aligned scores agree
+    to allclose(rtol=1e-5, atol=1e-5) — the contract
+    tests/test_sharded_serving.py enforces with the sequential path as
+    oracle.  Tie-adjacent rows can legally reorder; consumers needing
+    exact order keep the default.  Requires the batch divisible by the
+    mesh size.
     """
     cand_ids, valid = s2["cand_ids"], s2["valid"]
-    cand_ids = constrain(cand_ids, mesh, P())
-    user_feat = constrain(s1["user_feat"], mesh, P())
-    hist_emb = constrain(s1["hist_emb"], mesh, P())
+    batch_spec = P(SHARD_AXIS) if rank_parallel else P()
+    cand_ids = constrain(cand_ids, mesh, batch_spec)
+    user_feat = constrain(s1["user_feat"], mesh, batch_spec)
+    hist_emb = constrain(s1["hist_emb"], mesh, batch_spec)
     cand_cate = jnp.zeros_like(cand_ids)
     item_feat = item_features(params, cand_ids, cand_cate)
     cross = (item_feat[..., :cfg.item_embed_dim]
              * user_feat[..., None, -cfg.item_embed_dim:])
     rscores = ranking.ranking_scores(params["rank"], cfg, user_feat,
                                      item_feat, hist_emb, cross)[task]
-    rscores = constrain(rscores, mesh, P())
+    rscores = constrain(rscores, mesh, batch_spec)
     rscores = jnp.where(valid, rscores, merge_sort.NEG)
     order = jnp.argsort(-rscores, axis=-1)
     return dict(
@@ -370,16 +382,21 @@ def sharded_serve(params: Params, state: IndexState, cfg: SVQConfig,
                   sidx: ShardedServingIndex, batch: Dict[str, jax.Array],
                   items_per_cluster: int = 256, task: int = 0,
                   use_kernel: bool = False, fused: bool = False,
-                  mesh: Optional[Mesh] = None) -> Dict[str, jax.Array]:
+                  mesh: Optional[Mesh] = None,
+                  rank_parallel: bool = False) -> Dict[str, jax.Array]:
     """Distributed two-step retrieval, bit-exact vs ``retriever.serve``.
 
     Composes the three stage functions (rank -> merge -> ranking); under
     one jit this traces exactly the pre-split op sequence.  ``fused``
-    selects the slab-free merge+gather+rank stage.
+    selects the slab-free merge+gather+rank stage; ``rank_parallel``
+    batch-partitions stage 4b under its tolerance contract (see
+    ``sharded_stage_ranking`` — bit-exactness then holds for stages
+    1-3 only).
     """
     s1 = sharded_stage_rank(params, state, cfg, sidx, batch, task=task,
                             use_kernel=use_kernel, mesh=mesh)
     s2 = sharded_stage_merge(cfg, sidx, s1,
                              items_per_cluster=items_per_cluster,
                              use_kernel=use_kernel, fused=fused, mesh=mesh)
-    return sharded_stage_ranking(params, cfg, s1, s2, task=task, mesh=mesh)
+    return sharded_stage_ranking(params, cfg, s1, s2, task=task, mesh=mesh,
+                                 rank_parallel=rank_parallel)

@@ -25,7 +25,7 @@ def tiny_cfg():
 
 
 def make_service(tracer=None, n_shards=None, delta_spare=4, seed=0,
-                 n_items=300):
+                 n_items=300, rank_parallel=False):
     """-> (cfg, service, request_batch) over a freshly seeded store."""
     cfg = tiny_cfg()
     params, state = retriever.init(jax.random.PRNGKey(seed), cfg)
@@ -45,7 +45,8 @@ def make_service(tracer=None, n_shards=None, delta_spare=4, seed=0,
             mesh = make_serving_mesh(n_shards)
     svc = RetrievalService(cfg, params, state, items_per_cluster=32,
                            n_shards=n_shards, mesh=mesh,
-                           delta_spare=delta_spare, tracer=tracer)
+                           delta_spare=delta_spare, tracer=tracer,
+                           rank_parallel=rank_parallel)
     users = np.arange(4) % cfg.n_users
     batch = dict(
         user_id=users.astype(np.int32),

@@ -1,0 +1,354 @@
+"""Federation router: bit-identity, merge properties, A/B, accounting.
+
+The load-bearing contract: a SINGLE-backend federated serve is
+bit-identical to calling ``RetrievalService.serve_batch`` directly (the
+router short-circuits — no merge, no normalization), on the
+single-device path AND through the sharded service.  On top of that:
+
+  - ``federated_merge`` equals an independent python reference (global
+    sort by (-score, fan-out position, slot) + keep-first dedup) for
+    random inputs, is verbatim for one input, and is idempotent;
+  - hash-based A/B assignment is deterministic per request id and
+    lands near the configured fraction over a population;
+  - contribution ratios over the frozen backend union sum to 1 and
+    export through the ``svq_fed_*`` metric surface;
+  - the micro-batcher composes with the router as its serve fn;
+  - ``rank_parallel`` sharded ranking (satellite: batch-parallel stage
+    4) matches the replicated oracle under the documented tolerance
+    contract: identical candidate-id sets, id-aligned scores to
+    allclose(1e-5), stages 1-3 still bit-exact.
+
+Runs in tier-1 on one device and again in the tier-2 8-device process
+(scripts/test.sh), where the sharded paths cross real device
+boundaries.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.merge_sort import NEG
+from repro.obs import registry as registry_lib
+from repro.obs import slo as slo_lib
+from repro.retrieval import api, backends
+from repro.retrieval.registry import RetrieverRegistry
+from repro.serving import federation
+from tests._hypo import given, settings, st
+from tests._obs_svc import make_service
+
+K = 8
+
+
+# -- merge properties ------------------------------------------------------
+
+def _rand_candidates(rng, name, b, width, n_ids=40, quantize=True):
+    """Synthetic single-source Candidates with deliberate score ties."""
+    ids_rows, score_rows = [], []
+    for _ in range(b):
+        n = int(rng.integers(0, width + 1))
+        row_ids = rng.choice(n_ids, size=n, replace=False).astype(np.int64)
+        scores = rng.normal(size=n)
+        if quantize:
+            scores = np.round(scores)            # force cross-source ties
+        order = np.lexsort((row_ids, -scores))
+        ids_rows.append(row_ids[order])
+        score_rows.append(scores[order])
+    return api.pad_candidates(name, ids_rows, score_rows, width)
+
+
+def _reference_merge(cands, k):
+    """Independent merge oracle: global sort by (-score, source
+    position, slot), keep-first dedup, truncate to k."""
+    b = cands[0].batch
+    rows = []
+    for r in range(b):
+        entries = []
+        for src, c in enumerate(cands):
+            n = int(np.asarray(c.valid[r], bool).sum())
+            for slot in range(n):
+                entries.append((-float(c.scores[r, slot]), src, slot,
+                                int(c.ids[r, slot])))
+        entries.sort()
+        out, seen = [], set()
+        for negs, src, slot, item in entries:
+            if item in seen:
+                continue
+            seen.add(item)
+            out.append((item, -negs, src))
+            if len(out) == k:
+                break
+        rows.append(out)
+    return rows
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=1, max_value=4))
+def test_merge_matches_reference(seed, n_src):
+    rng = np.random.default_rng(seed)
+    cands = [_rand_candidates(rng, f"b{j}", b=3, width=6)
+             for j in range(n_src)]
+    merged = federation.federated_merge(cands, K).check()
+    assert merged.source_names == tuple(f"b{j}" for j in range(n_src))
+    ref = _reference_merge(cands, K)
+    for r in range(3):
+        n = int(np.asarray(merged.valid[r], bool).sum())
+        assert n == len(ref[r])
+        for col, (item, score, src) in enumerate(ref[r]):
+            assert int(merged.ids[r, col]) == item
+            assert float(merged.scores[r, col]) == score   # bit-exact
+            assert int(merged.sources[r, col]) == src
+        assert (np.asarray(merged.ids[r, n:]) == api.INVALID_ID).all()
+        assert (np.asarray(merged.scores[r, n:]) == NEG).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_merge_of_one_is_verbatim_and_idempotent(seed):
+    rng = np.random.default_rng(seed)
+    single = _rand_candidates(rng, "only", b=4, width=K)
+    m1 = federation.federated_merge([single], K)
+    np.testing.assert_array_equal(m1.ids, single.ids)
+    np.testing.assert_array_equal(m1.scores, single.scores)
+    np.testing.assert_array_equal(m1.valid, single.valid)
+    m2 = federation.federated_merge([m1], K)      # merge is idempotent
+    np.testing.assert_array_equal(m2.ids, m1.ids)
+    np.testing.assert_array_equal(m2.scores, m1.scores)
+
+
+def test_merge_subset_consistency(rng):
+    """Adding a backend whose candidates are already dominated (all
+    below the incumbent's k-th score) leaves the top-k unchanged."""
+    a = _rand_candidates(rng, "a", b=2, width=K, quantize=False)
+    low_rows = [np.arange(100, 103, dtype=np.int64)] * 2
+    low_scores = [np.array([-50.0, -60.0, -70.0])] * 2
+    weak = api.pad_candidates("weak", low_rows, low_scores, K)
+    merged = federation.federated_merge([a, weak], K)
+    for r in range(2):
+        n = int(np.asarray(a.valid[r], bool).sum())
+        np.testing.assert_array_equal(merged.ids[r, :n], a.ids[r, :n])
+        np.testing.assert_array_equal(merged.scores[r, :n],
+                                      a.scores[r, :n])
+
+
+# -- A/B determinism -------------------------------------------------------
+
+def test_assign_arm_deterministic_and_calibrated():
+    split = federation.ABSplit("control", "treat", fraction_b=0.3,
+                               salt="exp1")
+    arms = [federation.assign_arm(split, i) for i in range(4000)]
+    assert arms == [federation.assign_arm(split, i) for i in range(4000)]
+    frac = arms.count("treat") / len(arms)
+    assert abs(frac - 0.3) < 0.03
+    # a new salt reshuffles the population
+    resalted = [federation.assign_arm(split._replace(salt="exp2"), i)
+                for i in range(4000)]
+    assert resalted != arms
+
+
+# -- router over a live service --------------------------------------------
+
+def _router_env(n_shards=None, rank_parallel=False, split=None,
+                scenario_backends=("svq",)):
+    cfg, svc, batch = make_service(n_shards=n_shards, delta_spare=0)
+    reg = RetrieverRegistry()
+    reg.register("svq", lambda: backends.SVQServiceRetriever(svc))
+    reg.register("bf", lambda: backends.BruteForceRetriever(
+        svc.user_embedding, backends.corpus_from_service(svc),
+        name="bf"))
+    router = federation.FederationRouter(
+        reg, [federation.Scenario("main", tuple(scenario_backends),
+                                  split=split, k=K)],
+        default_scenario="main")
+    return cfg, svc, batch, reg, router
+
+
+def test_single_backend_bit_identity():
+    cfg, svc, batch, reg, router = _router_env()
+    ref = svc.serve_batch(batch)
+    out = router.serve(batch)
+    assert out.source_names == ("svq",)
+    np.testing.assert_array_equal(out.ids, ref["item_ids"][:, :K])
+    np.testing.assert_array_equal(out.scores, ref["scores"][:, :K])
+    assert router.n_merges == 0           # short-circuit: no merge ran
+
+
+def test_single_backend_bit_identity_sharded():
+    cfg, svc, batch, reg, router = _router_env(n_shards=2)
+    ref = svc.serve_batch(batch)
+    out = router.serve(batch)
+    np.testing.assert_array_equal(out.ids, ref["item_ids"][:, :K])
+    np.testing.assert_array_equal(out.scores, ref["scores"][:, :K])
+
+
+def test_fanout_merge_spans_and_accounting():
+    cfg, svc, batch, reg, router = _router_env(
+        scenario_backends=("svq", "bf"))
+    sink = []
+    out = router.serve(batch, span_sink=sink).check()
+    assert out.source_names == ("svq", "bf")
+    assert router.n_merges == 1
+    span_names = [s.name for s in sink]
+    assert "fed_svq" in span_names and "fed_bf" in span_names
+    assert "fed_merge" in span_names
+    # ratios over the frozen union always sum to 1 (here the exact
+    # f64 MIPS scores dominate the untrained svq ranking scores, so
+    # the split is lopsided -- that collapse is exactly what the
+    # contribution series exists to surface)
+    snap = router.contribution_snapshot()
+    assert snap["ratio_svq"] + snap["ratio_bf"] == pytest.approx(1.0)
+    assert snap["max_ratio"] == pytest.approx(1.0)
+
+
+def _half_corpus(corpus_fn, parity):
+    """Restrict a corpus view to even/odd storage slots via NEG bias."""
+    def f():
+        emb, bias, ids = corpus_fn()
+        keep = (np.arange(len(ids)) % 2) == parity
+        return emb, np.where(keep, bias, NEG), ids
+    return f
+
+
+def test_disjoint_union_merge_equals_oracle_and_contribution():
+    """Two brute-force backends over disjoint corpus halves: their
+    merged top-k equals the full-corpus oracle, and contribution
+    splits across both backends."""
+    cfg, svc, batch = make_service(delta_spare=0)
+    corpus = backends.corpus_from_service(svc)
+    reg = RetrieverRegistry()
+    for parity, name in ((0, "bf_even"), (1, "bf_odd")):
+        reg.register(name, lambda p=parity, n=name:
+                     backends.BruteForceRetriever(
+                         svc.user_embedding, _half_corpus(corpus, p),
+                         name=n))
+    router = federation.FederationRouter(
+        reg, [federation.Scenario("main", ("bf_even", "bf_odd"), k=K)],
+        default_scenario="main")
+    out = router.serve(batch).check()
+    oracle = backends.BruteForceRetriever(
+        svc.user_embedding, corpus).serve(batch, K)
+    np.testing.assert_array_equal(out.ids, oracle.ids)
+    np.testing.assert_array_equal(out.scores, oracle.scores)
+    snap = router.contribution_snapshot()
+    assert snap["ratio_bf_even"] + snap["ratio_bf_odd"] \
+        == pytest.approx(1.0)
+    assert snap["ratio_bf_even"] > 0.0 and snap["ratio_bf_odd"] > 0.0
+    assert 0.0 < snap["entropy_ratio"] <= 1.0
+
+
+def test_ab_arm_joins_fanout_deterministically():
+    split = federation.ABSplit("svq", "bf", fraction_b=1.0, salt="s")
+    cfg, svc, batch, reg, router = _router_env(split=split)
+    sc, fanout, arm = router.resolve(request_id=123)
+    assert arm == "bf" and fanout == ("svq", "bf")
+    assert router.resolve(request_id=123)[1:] == (fanout, arm)
+    out = router.serve(batch, request_id=123)
+    assert router.n_merges == 1           # the arm joined the merge
+    assert ("svq", "bf") == out.source_names
+    # fraction_b=0: arm A (already in the fan-out) -> short-circuit
+    router2 = _router_env(split=split._replace(fraction_b=0.0))[4]
+    router2.serve(batch, request_id=123)
+    assert router2.n_merges == 0
+
+
+def test_router_metrics_export():
+    cfg, svc, batch, reg, router = _router_env(
+        scenario_backends=("svq", "bf"))
+    router.serve(batch)
+    mreg = router.register_metrics(registry_lib.MetricRegistry())
+    fams = {f.name: f for f in mreg.collect()}
+    assert fams["svq_fed_requests_total"].series[0][1] == 1.0
+    scen = {lb["scenario"]: v for lb, v in
+            fams["svq_fed_scenario_requests_total"].series}
+    assert scen == {"main": 1.0}
+    bks = {lb["backend"]: v for lb, v in
+           fams["svq_fed_backend_requests_total"].series}
+    assert bks == {"svq": 1.0, "bf": 1.0}
+    contrib = {lb["backend"]: v for lb, v in
+               fams["svq_fed_contribution"].series}
+    assert set(contrib) == {"svq", "bf"}
+    assert sum(contrib.values()) == pytest.approx(1.0)
+    assert "svq_fed_merge_seconds" in fams
+    assert "svq_fed_contribution_entropy_ratio" in fams
+    # the registry's lifecycle series ride along
+    live = {lb["backend"]: v for lb, v in
+            fams["svq_fed_backend_live"].series}
+    assert live == {"svq": 1.0, "bf": 1.0}
+
+
+def test_router_through_batcher():
+    cfg, svc, batch, reg, router = _router_env(
+        scenario_backends=("svq", "bf"))
+    ref = router.serve_batch(batch)
+    b = router.make_batcher(max_batch=8, max_delay_s=0.001)
+    try:
+        futs = [b.submit({k: v[i:i + 1] for k, v in batch.items()})
+                for i in range(4)]
+        rows = [f.result(timeout=5.0) for f in futs]
+    finally:
+        b.close()
+    for i, row in enumerate(rows):
+        np.testing.assert_array_equal(row["item_ids"][0],
+                                      ref["item_ids"][i])
+        np.testing.assert_array_equal(row["scores"][0], ref["scores"][i])
+
+
+def test_default_federation_slos_validate():
+    for spec in federation.default_federation_slos():
+        assert spec.validate() is spec
+        assert spec.metric.startswith("svq_fed_")
+    assert hasattr(slo_lib, "SLOEngine")  # specs feed the alert engine
+
+
+# -- satellite: batch-parallel replicated ranking --------------------------
+
+def _batch8(cfg, rng):
+    users = np.arange(8) % cfg.n_users
+    return dict(user_id=users.astype(np.int32),
+                hist=rng.integers(0, cfg.n_items,
+                                  size=(8, cfg.user_hist_len)
+                                  ).astype(np.int32))
+
+
+def test_rank_parallel_tolerance_parity():
+    """Batch-parallel stage-4 ranking vs the replicated oracle.
+
+    Contract (serving/sharding.py): per row the candidate-id SET is
+    identical and id-aligned ranking scores agree to
+    allclose(rtol=1e-5, atol=1e-5); stages 1-3 (merge_scores,
+    exact_scores, index_ids) stay bit-exact.  Order may differ only
+    between tie-adjacent rows within the tolerance.
+    """
+    n_shards = 2
+    if jax.device_count() % n_shards:
+        pytest.skip("device count not divisible by shard count")
+    rng = np.random.default_rng(11)
+    # identical seed -> identical weights and store; one flag apart
+    cfg, svc_seq, _ = make_service(n_shards=n_shards, delta_spare=0,
+                                   seed=5)
+    _, svc_rp, _ = make_service(n_shards=n_shards, delta_spare=0,
+                                seed=5, rank_parallel=True)
+    batch = _batch8(cfg, rng)
+    ref = svc_seq.serve_batch(batch)
+    out = svc_rp.serve_batch(batch)
+
+    # stages 1-3 untouched: bit-exact
+    np.testing.assert_array_equal(ref["merge_scores"],
+                                  out["merge_scores"])
+    np.testing.assert_array_equal(ref["exact_scores"],
+                                  out["exact_scores"])
+    np.testing.assert_array_equal(ref["index_ids"], out["index_ids"])
+    # stage 4: same candidate sets, id-aligned scores within tolerance
+    for r in range(8):
+        rv = np.asarray(ref["scores"][r]) > NEG / 2
+        ov = np.asarray(out["scores"][r]) > NEG / 2
+        ref_ids = np.asarray(ref["item_ids"][r])[rv]
+        out_ids = np.asarray(out["item_ids"][r])[ov]
+        assert set(ref_ids.tolist()) == set(out_ids.tolist())
+        ref_by_id = dict(zip(ref_ids.tolist(),
+                             np.asarray(ref["scores"][r])[rv].tolist()))
+        out_by_id = dict(zip(out_ids.tolist(),
+                             np.asarray(out["scores"][r])[ov].tolist()))
+        for item, s in ref_by_id.items():
+            np.testing.assert_allclose(out_by_id[item], s,
+                                       rtol=1e-5, atol=1e-5)

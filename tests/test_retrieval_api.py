@@ -1,0 +1,290 @@
+"""The unified Retriever protocol: ordering contract, adapters, registry.
+
+Three layers of contract:
+
+  1. baselines ordering (satellite of the federation PR): every scored
+     search path — ``brute_force.search_topk``, ``HNSW.search_scored``,
+     ``DRIndex.retrieve_scored`` — returns scores DESCENDING with ties
+     broken by ASCENDING item id, deterministically under corpus
+     permutation.
+  2. adapter contract: every ``repro.retrieval`` backend serves a
+     ``Candidates`` with (B, k) shapes, a valid prefix, non-increasing
+     scores and unique ids per row; pad-based backends carry
+     (-1, NEG) invalid lanes.
+  3. SVQ bit-identity: the service adapter's ids/scores are the
+     service's ``serve_batch`` arrays verbatim — the protocol layer
+     adds zero numeric drift.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines import brute_force, deep_retrieval, hnsw
+from repro.core import assignment_store as astore
+from repro.core.merge_sort import NEG
+from repro.obs import registry as registry_lib
+from repro.retrieval import api, backends, registry
+from tests._obs_svc import make_service
+
+K = 10
+
+
+# -- layer 1: the shared ordering contract on the baselines ----------------
+
+def _assert_desc_id_stable(ids, scores):
+    """scores non-increasing; equal-score runs have ascending ids."""
+    ids = np.asarray(ids)
+    scores = np.asarray(scores)
+    assert (np.diff(scores) <= 0).all()
+    same = np.diff(scores) == 0
+    assert (np.diff(ids)[same] > 0).all()
+
+
+def test_order_desc_stable_breaks_ties_by_id(rng):
+    scores = rng.integers(0, 4, 64).astype(np.float64)   # many ties
+    ids = rng.permutation(64).astype(np.int64)
+    order = brute_force.order_desc_stable(scores, ids)
+    _assert_desc_id_stable(ids[order], scores[order])
+
+
+def test_search_topk_contract_and_permutation_invariance(rng):
+    d, n = 8, 50
+    items = rng.normal(size=(n, d))
+    # quantized scores force ties, including at the k boundary
+    u = np.round(rng.normal(size=(3, d)))
+    items = np.round(items)
+    ids = np.arange(n, dtype=np.int64)
+    out_ids, out_scores = brute_force.search_topk(u, items, None, K,
+                                                  ids=ids)
+    assert out_ids.shape == (3, K) and out_scores.shape == (3, K)
+    for r in range(3):
+        _assert_desc_id_stable(out_ids[r], out_scores[r])
+    # permuting corpus storage order must not change the result
+    perm = rng.permutation(n)
+    p_ids, p_scores = brute_force.search_topk(u, items[perm], None, K,
+                                              ids=ids[perm])
+    np.testing.assert_array_equal(out_ids, p_ids)
+    np.testing.assert_array_equal(out_scores, p_scores)
+
+
+def test_hnsw_search_scored_contract(rng):
+    vecs = rng.normal(size=(80, 8)).astype(np.float32)
+    idx = hnsw.build_hnsw(vecs, m=8, ef_construction=40)
+    for q in rng.normal(size=(3, 8)):
+        ids, scores = idx.search_scored(q, K, ef=32)
+        assert len(ids) == len(scores) <= K
+        _assert_desc_id_stable(ids, scores)
+        # score really is the ip similarity of the returned vector
+        np.testing.assert_allclose(scores, vecs[ids] @ q, rtol=1e-5)
+
+
+def test_dr_retrieve_scored_contract(rng):
+    cfg = deep_retrieval.DRConfig(depth=2, k_nodes=8, dim=8,
+                                  n_paths_per_item=2, beam=4)
+    params = deep_retrieval.init_dr(jax.random.PRNGKey(0), cfg)
+    index = deep_retrieval.DRIndex(cfg, n_items=120, seed=1)
+    emb = rng.normal(size=(120, 8))
+    bias = rng.normal(size=120)
+    for q in rng.normal(size=(2, 8)):
+        ids, scores = index.retrieve_scored(params, q, n_paths=6,
+                                            max_items=30, item_emb=emb,
+                                            item_bias=bias)
+        assert len(ids) == len(scores) > 0
+        _assert_desc_id_stable(ids, scores)
+        np.testing.assert_allclose(scores, emb[ids] @ q + bias[ids],
+                                   rtol=1e-7)
+
+
+# -- layers 2+3: adapters over a live tiny service -------------------------
+
+@pytest.fixture(scope="module")
+def svc_env():
+    cfg, svc, batch = make_service(delta_spare=0)
+    return cfg, svc, batch
+
+
+def _all_backends(cfg, svc):
+    embed = svc.user_embedding
+    corpus = backends.corpus_from_service(svc)
+    dr_cfg = deep_retrieval.DRConfig(depth=2, k_nodes=8,
+                                     dim=cfg.embed_dim,
+                                     n_paths_per_item=2, beam=4)
+    dr_params = deep_retrieval.init_dr(jax.random.PRNGKey(3), dr_cfg)
+    n_slots = corpus()[0].shape[0]
+    dr_index = deep_retrieval.DRIndex(dr_cfg, n_items=n_slots, seed=2)
+    return [
+        backends.SVQServiceRetriever(svc),
+        backends.BruteForceRetriever(embed, corpus),
+        backends.HNSWRetriever(embed, corpus, m=8, ef_construction=40),
+        backends.DeepRetrievalRetriever(embed, corpus, dr_params,
+                                        dr_index, dr_cfg, n_paths=6),
+    ]
+
+
+def test_adapter_contract(svc_env):
+    cfg, svc, batch = svc_env
+    for backend in _all_backends(cfg, svc):
+        out = backend.serve(batch, K).check()
+        assert out.ids.shape == out.scores.shape == (4, K)
+        assert out.source_names == (backend.name,)
+        for r in range(4):
+            v = np.asarray(out.valid[r], bool)
+            n = int(v.sum())
+            assert v[:n].all() and not v[n:].any(), backend.name
+            row_ids = np.asarray(out.ids[r, :n])
+            assert len(set(row_ids.tolist())) == n, backend.name
+            assert (np.diff(np.asarray(out.scores[r, :n])) <= 0).all()
+            assert (np.asarray(out.scores[r, n:]) <= NEG / 2).all()
+            assert (np.asarray(out.sources[r, :n]) == 0).all()
+            assert (np.asarray(out.sources[r, n:])
+                    == api.INVALID_SOURCE).all()
+        s = backend.stats()
+        assert s["n_serves"] == 1.0 and s["n_rows"] == 4.0
+
+
+def test_baseline_adapters_tie_stable(svc_env):
+    """Non-SVQ backends additionally order ties by ascending id."""
+    cfg, svc, batch = svc_env
+    for backend in _all_backends(cfg, svc)[1:]:
+        out = backend.serve(batch, K)
+        for r in range(out.batch):
+            n = int(np.asarray(out.valid[r], bool).sum())
+            _assert_desc_id_stable(out.ids[r, :n], out.scores[r, :n])
+
+
+def test_pad_backends_invalid_lane_sentinels(svc_env):
+    cfg, svc, batch = svc_env
+    # HNSW over a 300-item corpus, asked for more than its beam can
+    # always fill at tiny ef -> padded rows appear with the sentinels
+    backend = backends.HNSWRetriever(svc.user_embedding,
+                                     backends.corpus_from_service(svc),
+                                     m=4, ef_construction=16,
+                                     ef_search=8)
+    out = backend.serve(batch, K)
+    inval = ~np.asarray(out.valid, bool)
+    assert (np.asarray(out.ids)[inval] == api.INVALID_ID).all()
+    assert (np.asarray(out.scores)[inval] == NEG).all()
+
+
+def test_svq_service_adapter_bit_identity(svc_env):
+    cfg, svc, batch = svc_env
+    ref = svc.serve_batch(batch)
+    out = backends.SVQServiceRetriever(svc).serve(batch, K)
+    np.testing.assert_array_equal(out.ids, ref["item_ids"][:, :K])
+    np.testing.assert_array_equal(out.scores, ref["scores"][:, :K])
+    np.testing.assert_array_equal(
+        np.asarray(out.valid), np.asarray(ref["scores"][:, :K]) > NEG / 2)
+
+
+def test_svq_index_adapter_matches_service(svc_env):
+    cfg, svc, batch = svc_env
+    store = svc.store_snapshot()
+    idx = astore.build_serving_index(store, cfg.n_clusters)
+    with svc._lock:
+        params, state = svc._params, svc._index_state
+    out = backends.SVQIndexRetriever(
+        cfg, params, state, idx, items_per_cluster=32).serve(batch, K)
+    ref = svc.serve_batch(batch)
+    np.testing.assert_array_equal(out.ids, ref["item_ids"][:, :K])
+    np.testing.assert_array_equal(out.scores, ref["scores"][:, :K])
+
+
+def test_deltas_unsupported_on_offline_backends(svc_env):
+    cfg, svc, batch = svc_env
+    backend = backends.BruteForceRetriever(
+        svc.user_embedding, backends.corpus_from_service(svc))
+    assert not backend.supports_deltas
+    with pytest.raises(api.DeltasUnsupported):
+        backend.apply_deltas(None)
+    assert backends.SVQServiceRetriever(svc).supports_deltas
+
+
+# -- registry lifecycle ----------------------------------------------------
+
+class _Probe(api.Retriever):
+    built_count = 0
+
+    def __init__(self, name="probe", generation=7.0):
+        super().__init__(name)
+        self.gen = generation
+        self.closed = False
+
+    def _build(self):
+        type(self).built_count += 1
+
+    def serve(self, batch, k, task=0, n_valid=None, span_sink=None):
+        self._count(batch, n_valid)
+        b = len(batch["user_id"])
+        ids = np.tile(np.arange(k, dtype=np.int64), (b, 1))
+        return api.Candidates.single(self.name, ids,
+                                     np.zeros((b, k)) - ids)
+
+    def close(self):
+        self.closed = True
+
+    def stats(self):
+        s = super().stats()
+        s["generation"] = self.gen
+        return s
+
+
+def test_registry_lazy_build_warm_evict():
+    _Probe.built_count = 0
+    made = []
+
+    def factory():
+        inst = _Probe()
+        made.append(inst)
+        return inst
+
+    reg = registry.RetrieverRegistry()
+    reg.register("probe", factory, description="test probe")
+    assert reg.registered() == ["probe"] and reg.live() == []
+    assert not made                       # registration did no work
+    inst = reg.get("probe")
+    assert inst.built and _Probe.built_count == 1
+    assert reg.get("probe") is inst       # cached, not reconstructed
+    assert reg.live() == ["probe"]
+    assert reg.generation("probe") == 7.0
+    assert reg.evict("probe") and made[0].closed
+    assert reg.live() == [] and reg.registered() == ["probe"]
+    assert not reg.evict("probe")         # idempotent
+    inst2 = reg.get("probe")              # spec survives eviction
+    assert inst2 is not inst and len(made) == 2
+    reg.warm()                            # all-names warm is a no-op now
+    assert len(made) == 2
+
+
+def test_registry_errors_and_replace():
+    reg = registry.RetrieverRegistry()
+    reg.register("a", _Probe)
+    with pytest.raises(ValueError):
+        reg.register("a", _Probe)
+    with pytest.raises(KeyError):
+        reg.get("missing")
+    first = reg.get("a")
+    reg.register("a", lambda: _Probe(generation=9.0), replace=True)
+    assert reg.live() == []               # replace evicted the instance
+    assert first.closed
+    assert reg.get("a").stats()["generation"] == 9.0
+    assert reg.generation("a") == 9.0
+
+
+def test_registry_metrics_export():
+    reg = registry.RetrieverRegistry()
+    reg.register("x", _Probe, description="x")
+    reg.register("y", lambda: _Probe(name="y"), description="y")
+    reg.get("x")
+    mreg = reg.register_metrics(registry_lib.MetricRegistry())
+    fams = {f.name: f for f in mreg.collect()}
+    live = dict()
+    for labels, v in fams["svq_fed_backend_live"].series:
+        live[labels["backend"]] = v
+    assert live == {"x": 1.0, "y": 0.0}
+    builds = {lb["backend"]: v
+              for lb, v in fams["svq_fed_backend_builds_total"].series}
+    assert builds == {"x": 1.0, "y": 0.0}
+    gens = {lb["backend"]: v
+            for lb, v in fams["svq_fed_backend_generation"].series}
+    assert gens == {"x": 7.0}             # only live backends report
